@@ -1,0 +1,92 @@
+"""End-to-end carbon-aware training driver: any assigned architecture,
+any CARINA policy, with fault tolerance, checkpointing, elastic resize,
+and full energy/carbon accounting.
+
+Demo preset (default, runs on CPU in a couple of minutes):
+    PYTHONPATH=src python examples/carbon_aware_training.py
+
+~100M-parameter end-to-end run (assignment deliverable (b); a few hundred
+steps — size the step count to your machine):
+    PYTHONPATH=src python examples/carbon_aware_training.py \
+        --preset 100m --steps 200
+
+Arbitrary arch / policy:
+    PYTHONPATH=src python examples/carbon_aware_training.py \
+        --arch falcon-mamba-7b --policy peak_aware_aggressive --steps 20
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_config
+from repro.core import (CarinaController, POLICIES, RunTracker, SimClock,
+                        render_run_dashboard)
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.fault_tolerance import (FailureInjector, Supervisor)
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.training.loop import LoopConfig, run_training
+
+
+def preset_100m(cfg):
+    """~100M-param llama-family config (tinyllama shrunk in width/depth)."""
+    return dataclasses.replace(
+        cfg, name="llama-100m", num_layers=10, d_model=768, num_heads=12,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--policy", default="peak_aware_boosted_offhours",
+                    choices=list(POLICIES))
+    ap.add_argument("--preset", default="demo", choices=["demo", "100m"])
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="experiments/carbon_aware/ckpt")
+    ap.add_argument("--inject-failure-at", type=int, default=-1)
+    args = ap.parse_args()
+
+    if args.preset == "100m":
+        cfg = preset_100m(get_config(args.arch, smoke=False))
+        args.seq = max(args.seq, 256)
+    else:
+        cfg = get_config(args.arch, smoke=True)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} family={cfg.family} params={model.param_count():,} "
+          f"policy={args.policy}")
+
+    opt = AdamWConfig(total_steps=args.steps, warmup_steps=max(args.steps // 10, 1))
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
+    tracker = RunTracker(f"{cfg.name}-{args.policy}",
+                         log_path="experiments/carbon_aware/units.jsonl")
+    controller = CarinaController(
+        policy=POLICIES[args.policy], tracker=tracker, max_replicas=1,
+        clock=SimClock(start_hour=9.0, speedup=3600.0))
+    injector = FailureInjector(
+        fail_at_steps=(args.inject_failure_at,) if args.inject_failure_at >= 0
+        else ())
+
+    res = run_training(
+        model, opt, data,
+        LoopConfig(total_steps=args.steps, steps_per_unit=5,
+                   ckpt_dir=args.ckpt_dir, log_every=5),
+        controller=controller, injector=injector,
+        supervisor=Supervisor(elastic=False))
+
+    print(f"finished at step {res.final_step}, restarts={res.restarts}")
+    for m in res.metrics_history[-5:]:
+        print(f"  step {m['step']:4d} loss {m['loss']:.4f}")
+    md = render_run_dashboard(tracker.close(), "experiments/carbon_aware")
+    print()
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

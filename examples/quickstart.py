@@ -1,0 +1,48 @@
+"""Quickstart: train a small LM under CARINA tracking and print the
+run dashboard.  Runs in ~1 minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_config
+from repro.core import (CarinaController, PEAK_AWARE_BOOSTED, RunTracker,
+                        SimClock, render_run_dashboard)
+from repro.data.pipeline import SyntheticLM
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.training.loop import LoopConfig, run_training
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={model.param_count():,}")
+
+    opt = AdamWConfig(total_steps=30, warmup_steps=3, peak_lr=1e-3)
+    data = SyntheticLM(cfg, batch=4, seq=64)
+
+    tracker = RunTracker("quickstart", log_path="experiments/quickstart/units.jsonl")
+    controller = CarinaController(
+        policy=PEAK_AWARE_BOOSTED, tracker=tracker, max_replicas=1,
+        clock=SimClock(start_hour=12.0, speedup=7200.0))  # 1s wall = 2h sim
+
+    res = run_training(model, opt, data,
+                       LoopConfig(total_steps=30, steps_per_unit=5, log_every=5),
+                       controller=controller)
+    print(f"finished at step {res.final_step}")
+    for m in res.metrics_history:
+        print(f"  step {m['step']:3d} loss {m['loss']:.4f} lr {m['lr']:.2e}")
+
+    md = render_run_dashboard(tracker.close(), "experiments/quickstart")
+    print()
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

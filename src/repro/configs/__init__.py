@@ -1,0 +1,40 @@
+"""Architecture registry: the 10 assigned architectures + the CARINA OEM workload."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, MLAConfig, SSMConfig, RGLRUConfig,
+    ShapeConfig, SHAPES, REGISTRY, cell_is_applicable, smoke_variant,
+    model_flops, flops_per_token_train,
+)
+
+_ARCH_MODULES = {
+    "granite-34b": "granite_34b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "llama3-405b": "llama3_405b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-small": "whisper_small",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def all_configs(smoke: bool = False):
+    return {n: get_config(n, smoke=smoke) for n in ARCH_NAMES}
+
+
+for _n in ARCH_NAMES:
+    REGISTRY[_n] = _ARCH_MODULES[_n]

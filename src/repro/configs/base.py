@@ -1,0 +1,333 @@
+"""Config system for the repro framework.
+
+Every assigned architecture is expressed as a `ModelConfig` (frozen dataclass).
+Each arch module exposes:
+    FULL    -- the exact published configuration (assignment block)
+    SMOKE   -- a reduced same-family configuration for CPU tests
+    CONFIG = FULL (registry entry)
+
+Shapes (the four assigned LM input-shape cells) live in `SHAPES`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Block kinds used by models/transformer.py per-layer patterns.
+ATTN = "attn"          # softmax attention (GQA/MQA; window>0 => local)
+MLA = "mla"            # DeepSeek multi-head latent attention
+MAMBA = "mamba"        # Mamba-1 selective SSM
+RGLRU = "rglru"        # Griffin RG-LRU recurrent block
+LOCAL_ATTN = "local"   # local (windowed) attention
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0              # routed experts
+    num_shared_experts: int = 0
+    top_k: int = 1
+    d_ff_expert: int = 0              # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+    # layers that use MoE FFN: "all" | "all_but_first" (DeepSeek/Moonlight style)
+    layer_mode: str = "all_but_first"
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0              # 0 = full-rank q projection (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                  # 0 => ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0                # 0 => d_model
+    d_conv: int = 4
+    block_width_multiplier: float = 1.0
+    local_window: int = 2048          # window of the interleaved local-attn layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense|moe|ssm|hybrid|vlm|audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 => d_model // num_heads
+    # --- attention details
+    attention_kind: str = ATTN         # attn|mla|none
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_kind: str = "rope"            # rope|mrope|none|sinusoid
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # qwen2-vl temporal/h/w
+    attn_logit_softcap: float = 0.0
+    # --- per-layer block pattern, cycled over layers (temporal-mixing kind)
+    block_pattern: Tuple[str, ...] = (ATTN,)
+    # --- mlp
+    mlp_kind: str = "swiglu"           # swiglu|gelu
+    # --- sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # --- encoder-decoder (whisper)
+    encdec: bool = False
+    enc_layers: int = 0
+    dec_layers: int = 0
+    cross_kv_len: int = 1500           # stub encoder output length for decode cells
+    dec_train_len: int = 512           # decoder text length for train/prefill cells
+    # --- vlm
+    n_vision_tokens: int = 0           # leading placeholder tokens fed by the stub frontend
+    # --- embeddings / misc
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    # --- runtime knobs (not architecture)
+    remat: str = "none"                # none|dots|full
+    use_scan: bool = True
+    kernels: str = "auto"              # auto|xla|pallas  (auto: pallas on TPU only)
+    blocked_xent: bool = False         # vocab-blocked CE (memory-term optimization)
+    vocab_block: int = 8192
+    # --- §Perf hillclimb knobs (see EXPERIMENTS.md §Perf)
+    pad_heads_to_tp: bool = False      # head-padded TP attention (uneven heads)
+    moe_expert_fsdp: bool = True       # False: experts sharded EP-only (no FSDP AG)
+    decode_cache_seq_shard: bool = False  # shard decode KV cache seq over "model"
+    decode_2d_tp: bool = False         # decode: 2D weight TP, batch replicated,
+                                       # cache seq over (model, data) — activation
+                                       # psums replace FSDP weight gathers
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def dt_rank(self) -> int:
+        assert self.ssm is not None
+        return self.ssm.dt_rank or -(-self.d_model // 16)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Temporal-mixing kind for each layer (pattern cycled)."""
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.num_layers))
+
+    def layer_is_moe(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        if self.moe.layer_mode == "all":
+            return True
+        return i > 0  # all_but_first
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (matches models/model.py init exactly)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        nq, nkv = self.num_heads, self.num_kv_heads
+        v = self.vocab_size
+
+        def attn_params() -> int:
+            n = d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+            if self.qkv_bias:
+                n += (nq + 2 * nkv) * hd
+            return n
+
+        def mla_params() -> int:
+            assert self.mla is not None
+            m = self.mla
+            qdim = nq * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+            n = d * qdim if m.q_lora_rank == 0 else d * m.q_lora_rank + m.q_lora_rank * qdim + m.q_lora_rank
+            n += d * (m.kv_lora_rank + m.qk_rope_head_dim)          # down-proj (+rope k)
+            n += m.kv_lora_rank                                     # kv layernorm
+            n += m.kv_lora_rank * nq * (m.qk_nope_head_dim + m.v_head_dim)  # up-proj
+            n += nq * m.v_head_dim * d                              # o proj
+            return n
+
+        def mamba_params() -> int:
+            assert self.ssm is not None
+            s = self.ssm
+            di = s.expand * d
+            n = d * 2 * di                      # in_proj
+            n += di * s.d_conv + di             # conv1d + bias
+            n += di * (self.dt_rank + 2 * s.d_state)  # x_proj
+            n += self.dt_rank * di + di         # dt_proj
+            n += di * s.d_state + di            # A_log, D
+            n += di * d                         # out_proj
+            return n
+
+        def rglru_params() -> int:
+            assert self.rglru is not None
+            g = self.rglru
+            w = g.lru_width or d
+            n = 2 * d * w                       # x/gate branch in-proj
+            n += w * g.d_conv + w               # conv1d
+            n += 2 * w + 2 * w                  # RG-LRU input & recurrence gates (diag-ish per-channel) => use per-channel params
+            n += w                              # a param
+            n += w * d                          # out proj
+            return n
+
+        def dense_mlp(dff: int) -> int:
+            if self.mlp_kind == "swiglu":
+                return 3 * d * dff
+            return 2 * d * dff + dff + d       # gelu w/ biases
+
+        def moe_mlp() -> int:
+            assert self.moe is not None
+            m = self.moe
+            n = d * m.num_experts               # router
+            n += m.num_experts * 3 * d * m.d_ff_expert
+            n += m.num_shared_experts * 3 * d * m.d_ff_expert
+            return n
+
+        total = v * d                            # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        total += d                               # final norm
+
+        kinds = self.layer_kinds()
+        n_layers = self.enc_layers + self.dec_layers if self.encdec else self.num_layers
+        for i in range(self.num_layers):
+            k = kinds[i]
+            total += d                           # pre-mixer norm
+            if k == ATTN or k == LOCAL_ATTN:
+                total += attn_params()
+            elif k == MLA:
+                total += mla_params()
+            elif k == MAMBA:
+                total += mamba_params()
+            elif k == RGLRU:
+                total += rglru_params()
+            # mlp (mamba blocks in falcon-mamba have no separate MLP)
+            if k != MAMBA:
+                total += d                       # pre-mlp norm
+                total += moe_mlp() if self.layer_is_moe(i) else dense_mlp(self.d_ff)
+        if self.encdec:
+            # decoder layers: self-attn + cross-attn + mlp
+            for _ in range(self.dec_layers):
+                total += 2 * d + attn_params()          # self
+                total += d + attn_params()              # cross (same shape)
+                total += dense_mlp(self.d_ff)
+            total += d                                  # decoder final norm
+        _ = n_layers
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k + shared experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        inactive_per_layer = (m.num_experts - m.top_k) * 3 * self.d_model * m.d_ff_expert
+        n_moe_layers = sum(1 for i in range(self.num_layers) if self.layer_is_moe(i))
+        return self.param_count() - n_moe_layers * inactive_per_layer
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode" | "long_decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "long_decode"),
+}
+
+# archs whose temporal mixing is sub-quadratic end-to-end (may run long_500k)
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) dry-run cell is runnable; returns (ok, reason)."""
+    if shape.kind == "long_decode" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, "pure full-attention arch: 512k dense-KV decode not representable (DESIGN.md §4)"
+    return True, ""
+
+
+def smoke_variant(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Shrink a config to CPU-test scale, preserving family structure."""
+    kw = dict(
+        num_layers=min(cfg.num_layers, len(cfg.block_pattern) + 1),
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads > 1 else 1,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        use_scan=True,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(cfg.moe, num_experts=4, top_k=2, d_ff_expert=32)
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=0, qk_nope_head_dim=16,
+                              qk_rope_head_dim=8, v_head_dim=16)
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=8, d_conv=4, expand=2)
+    if cfg.rglru is not None:
+        kw["rglru"] = dataclasses.replace(cfg.rglru, lru_width=64, local_window=32)
+    if cfg.encdec:
+        kw["enc_layers"] = 2
+        kw["dec_layers"] = 2
+        kw["num_layers"] = 2
+        kw["cross_kv_len"] = 24
+        kw["dec_train_len"] = 16
+    if cfg.n_vision_tokens:
+        kw["n_vision_tokens"] = 8
+    if cfg.rope_kind == "mrope":
+        # sections must sum to head_dim//2 (reduced head_dim = 16)
+        kw["mrope_sections"] = (2, 3, 3)
+    kw["name"] = cfg.name + "-smoke"
+    kw.update(overrides)
+    return dataclasses.replace(cfg, **kw)
+
+
+# populated by configs/__init__.py
+REGISTRY: dict = {}
+
+
+def flops_per_token_train(cfg: ModelConfig) -> float:
+    """6 * N_active (the standard model-FLOPs estimate; attention extra ignored)."""
+    return 6.0 * cfg.active_param_count()
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for a cell: 6*N*D for train; 2*N*D for inference shapes."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    tokens = shape.global_batch
+    return 2.0 * n_act * tokens
+
+
+def nice_int(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}P"

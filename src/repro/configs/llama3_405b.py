@@ -1,0 +1,19 @@
+"""llama3-405b [dense] — GQA kv=8, 128k vocab. [arXiv:2407.21783]"""
+from repro.configs.base import ModelConfig, smoke_variant
+
+FULL = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    mlp_kind="swiglu",
+    rope_theta=500000.0,
+    tie_embeddings=False,
+)
+
+SMOKE = smoke_variant(FULL, num_kv_heads=2)
+CONFIG = FULL

@@ -1,0 +1,24 @@
+"""qwen2-vl-7b [vlm] — LM backbone with M-RoPE; vision frontend stubbed
+(input_specs supplies precomputed patch embeddings). [arXiv:2409.12191; hf]"""
+from repro.configs.base import ModelConfig, smoke_variant
+
+FULL = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    mlp_kind="swiglu",
+    qkv_bias=True,
+    rope_kind="mrope",
+    mrope_sections=(16, 24, 24),  # temporal / height / width rotary sections
+    rope_theta=1000000.0,
+    n_vision_tokens=64,           # stub frontend: 64 patch embeddings replace leading tokens
+    tie_embeddings=False,
+)
+
+SMOKE = smoke_variant(FULL, num_kv_heads=2)
+CONFIG = FULL

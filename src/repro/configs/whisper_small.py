@@ -1,0 +1,29 @@
+"""whisper-small [audio] — enc-dec transformer backbone; conv frontend stubbed
+(input_specs supplies precomputed frame embeddings). [arXiv:2212.04356]
+
+Convention (DESIGN.md §4): `num_layers` == encoder layers; seq_len in a shape
+cell = encoder frame length (train/prefill) or decoder KV length (decode).
+"""
+from repro.configs.base import ModelConfig, smoke_variant
+
+FULL = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,            # full MHA
+    d_ff=3072,
+    vocab_size=51865,
+    encdec=True,
+    enc_layers=12,
+    dec_layers=12,
+    cross_kv_len=1500,
+    dec_train_len=512,
+    mlp_kind="gelu",
+    rope_kind="sinusoid",
+    tie_embeddings=True,
+)
+
+SMOKE = smoke_variant(FULL, num_kv_heads=4)
+CONFIG = FULL

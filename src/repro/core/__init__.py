@@ -1,0 +1,14 @@
+"""CARINA: Carbon-Aware Recurrent INdustrial Analytics (the paper's core)."""
+from repro.core.carbon import DTE_FACTOR, GridCarbonModel, MIDWEST_HOURLY  # noqa: F401
+from repro.core.controller import CarinaController, SimClock  # noqa: F401
+from repro.core.dashboard import render_frontier_dashboard, render_run_dashboard  # noqa: F401
+from repro.core.energy import (ChipProfile, EnergyModel, MachineProfile,  # noqa: F401
+                               StepCost)
+from repro.core.policy import (BANDS, BASELINE, LARGE_BATCHES,  # noqa: F401
+                               LOW_PRIORITY_ONLY, PEAK_AWARE_AGGRESSIVE,
+                               PEAK_AWARE_BOOSTED, POLICIES, SMALL_BATCHES,
+                               Policy, TimeBands)
+from repro.core.simulator import (SimResult, calibrate_workload,  # noqa: F401
+                                  policy_frontier, simulate_campaign)
+from repro.core.tracker import RunSummary, RunTracker, UnitRecord, merge_summaries  # noqa: F401
+from repro.core.workload import OEM_CASE_1, OEM_CASE_2, OEMWorkload, TrainingCampaign  # noqa: F401

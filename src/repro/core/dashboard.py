@@ -1,0 +1,99 @@
+"""Local dashboard reporting (paper §2: "structured logs, summary metrics,
+plots, and dashboard artifacts").
+
+Emits a self-contained markdown dashboard + machine-readable JSON; a PNG
+frontier plot is produced when matplotlib is importable (optional).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List, Optional, Sequence
+
+from repro.core.simulator import SimResult
+from repro.core.tracker import RunSummary
+
+
+def _spark(values: Sequence[float], width: int = 48) -> str:
+    if not values:
+        return ""
+    blocks = "▁▂▃▄▅▆▇█"
+    lo, hi = min(values), max(values)
+    rng = (hi - lo) or 1.0
+    step = max(1, len(values) // width)
+    vs = [values[i] for i in range(0, len(values), step)]
+    return "".join(blocks[min(7, int(7 * (v - lo) / rng))] for v in vs)
+
+
+def render_run_dashboard(summary: RunSummary, out_dir: str,
+                         power_series: Optional[Sequence[float]] = None) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    lines = [
+        f"# CARINA run dashboard — {summary.name}",
+        "",
+        f"| metric | value |",
+        f"|---|---|",
+        f"| tracked units | {summary.units} |",
+        f"| runtime | {summary.runtime_h:.2f} h |",
+        f"| energy load | {summary.energy_kwh:.3f} kWh |",
+        f"| carbon burden | {summary.co2_kg:.3f} kg CO2e |",
+        "",
+        "## By phase",
+        "",
+        "| phase | units | runtime (h) | energy (kWh) | CO2e (kg) |",
+        "|---|---|---|---|---|",
+    ]
+    for ph, d in sorted(summary.by_phase.items()):
+        lines.append(f"| {ph} | {int(d['units'])} | {d['runtime_s']/3600:.2f} "
+                     f"| {d['energy_kwh']:.3f} | {d['co2_kg']:.3f} |")
+    if power_series:
+        lines += ["", "## Power trace", "", "```", _spark(power_series), "```"]
+    md = "\n".join(lines) + "\n"
+    with open(os.path.join(out_dir, "dashboard.md"), "w") as f:
+        f.write(md)
+    with open(os.path.join(out_dir, "dashboard.json"), "w") as f:
+        json.dump(dataclasses.asdict(summary), f, indent=2, sort_keys=True)
+    return md
+
+
+def render_frontier_dashboard(results: List[SimResult], out_dir: str,
+                              title: str = "policy frontier") -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    lines = [
+        f"# CARINA {title}",
+        "",
+        "| policy | runtime (h) | energy (kWh) | CO2e (kg) | Δruntime | Δenergy |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        lines.append(
+            f"| {r.policy} | {r.runtime_h:.2f} | {r.energy_kwh:.2f} "
+            f"| {r.co2_kg:.2f} | {r.runtime_delta_pct:+.2f}% "
+            f"| {r.energy_delta_pct:+.2f}% |")
+    md = "\n".join(lines) + "\n"
+    with open(os.path.join(out_dir, "frontier.md"), "w") as f:
+        f.write(md)
+    with open(os.path.join(out_dir, "frontier.json"), "w") as f:
+        json.dump([dataclasses.asdict(
+            dataclasses.replace(r, summary=None)) for r in results],
+            f, indent=2, sort_keys=True)
+    try:  # optional plot
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+        fig, ax = plt.subplots(figsize=(6, 4))
+        for r in results:
+            ax.scatter(r.runtime_delta_pct, -r.energy_delta_pct, s=40)
+            ax.annotate(r.policy.replace("peak_aware_", "pa_"),
+                        (r.runtime_delta_pct, -r.energy_delta_pct), fontsize=7)
+        ax.set_xlabel("runtime penalty (%)")
+        ax.set_ylabel("energy savings (%)")
+        ax.grid(alpha=0.3)
+        ax.set_title(title)
+        fig.tight_layout()
+        fig.savefig(os.path.join(out_dir, "frontier.png"), dpi=120)
+        plt.close(fig)
+    except Exception:
+        pass
+    return md

@@ -1,0 +1,135 @@
+"""Run-level and step-level instrumentation (paper Algorithm 1).
+
+For each tracked unit CARINA records runtime, selected worker intensity,
+estimated energy load, translated carbon burden, and execution metadata;
+units aggregate into a run summary.  Records stream to JSONL so a crash
+loses at most the open unit (resume/merge logic re-aggregates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.carbon import GridCarbonModel
+
+
+@dataclasses.dataclass
+class UnitRecord:
+    index: int
+    phase: str                    # time band at execution
+    intensity: float
+    runtime_s: float
+    energy_kwh: float
+    co2_kg: float
+    sim_time_h: float             # campaign wall-clock position (hours)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+
+@dataclasses.dataclass
+class RunSummary:
+    name: str
+    units: int
+    runtime_h: float
+    energy_kwh: float
+    co2_kg: float
+    by_phase: Dict[str, Dict[str, float]]
+    meta: Dict[str, Any]
+
+
+class RunTracker:
+    """granularity: "run" collapses everything into one unit at close();
+    "step" records each tracked unit (paper: whole-run or step-level)."""
+
+    def __init__(self, name: str, carbon: Optional[GridCarbonModel] = None,
+                 granularity: str = "step", log_path: Optional[str] = None,
+                 meta: Optional[dict] = None):
+        assert granularity in ("run", "step")
+        self.name = name
+        self.carbon = carbon or GridCarbonModel()
+        self.granularity = granularity
+        self.records: List[UnitRecord] = []
+        self.meta = dict(meta or {})
+        self._log_path = log_path
+        self._log_file = None
+        if log_path:
+            os.makedirs(os.path.dirname(log_path) or ".", exist_ok=True)
+            self._log_file = open(log_path, "a", buffering=1)
+        self._open_accum = {"runtime_s": 0.0, "energy_kwh": 0.0}
+
+    # ------------------------------------------------------------------
+    def record_unit(self, *, phase: str, intensity: float, runtime_s: float,
+                    energy_kwh: float, sim_time_h: float,
+                    meta: Optional[dict] = None) -> UnitRecord:
+        co2 = self.carbon.co2_kg(energy_kwh, hour_of_day=sim_time_h % 24.0)
+        if self.granularity == "run":
+            self._open_accum["runtime_s"] += runtime_s
+            self._open_accum["energy_kwh"] += energy_kwh
+            rec = UnitRecord(len(self.records), phase, intensity, runtime_s,
+                             energy_kwh, co2, sim_time_h, meta or {})
+            return rec  # not appended; aggregated at close
+        rec = UnitRecord(len(self.records), phase, intensity, runtime_s,
+                         energy_kwh, co2, sim_time_h, meta or {})
+        self.records.append(rec)
+        if self._log_file:
+            self._log_file.write(rec.to_json() + "\n")
+        return rec
+
+    # ------------------------------------------------------------------
+    def summary(self) -> RunSummary:
+        if self.granularity == "run" and not self.records:
+            e = self._open_accum["energy_kwh"]
+            self.records.append(UnitRecord(
+                0, "run", 1.0, self._open_accum["runtime_s"], e,
+                self.carbon.co2_kg(e), 0.0, {}))
+        by_phase: Dict[str, Dict[str, float]] = {}
+        for r in self.records:
+            d = by_phase.setdefault(r.phase, {"runtime_s": 0.0, "energy_kwh": 0.0,
+                                              "co2_kg": 0.0, "units": 0.0})
+            d["runtime_s"] += r.runtime_s
+            d["energy_kwh"] += r.energy_kwh
+            d["co2_kg"] += r.co2_kg
+            d["units"] += 1
+        return RunSummary(
+            name=self.name,
+            units=len(self.records),
+            runtime_h=sum(r.runtime_s for r in self.records) / 3600.0,
+            energy_kwh=sum(r.energy_kwh for r in self.records),
+            co2_kg=sum(r.co2_kg for r in self.records),
+            by_phase=by_phase,
+            meta=self.meta,
+        )
+
+    def close(self) -> RunSummary:
+        s = self.summary()
+        if self._log_file:
+            self._log_file.write(json.dumps(
+                {"summary": dataclasses.asdict(s)}, sort_keys=True) + "\n")
+            self._log_file.close()
+            self._log_file = None
+        return s
+
+
+def merge_summaries(summaries: List[RunSummary], name: str = "merged") -> RunSummary:
+    """Resume/merge logic: combine partial runs (paper §2)."""
+    by_phase: Dict[str, Dict[str, float]] = {}
+    for s in summaries:
+        for ph, d in s.by_phase.items():
+            t = by_phase.setdefault(ph, {"runtime_s": 0.0, "energy_kwh": 0.0,
+                                         "co2_kg": 0.0, "units": 0.0})
+            for k in t:
+                t[k] += d[k]
+    return RunSummary(
+        name=name,
+        units=sum(s.units for s in summaries),
+        runtime_h=sum(s.runtime_h for s in summaries),
+        energy_kwh=sum(s.energy_kwh for s in summaries),
+        co2_kg=sum(s.co2_kg for s in summaries),
+        by_phase=by_phase,
+        meta={"merged_from": [s.name for s in summaries]},
+    )

@@ -1,0 +1,139 @@
+"""Distributed-optimization collectives.
+
+1. `int8_ring_allreduce`: chunked ring reduce-scatter + all-gather in which
+   every hop's wire payload is int8 (+ one fp32 scale): ~8x less ICI
+   traffic than an fp32 all-reduce, ~4x less than bf16.  Partial sums are
+   requantized per hop (1-bit-SGD lineage); `compressed_psum_grads` adds
+   sender-side error feedback so quantization error does not bias SGD.
+   Used by the shard_map DP train-step variant (training/step.py) for
+   replicated-parameter data parallelism — with FSDP/GSPMD the reductions
+   are internal to XLA and cannot be intercepted (DESIGN.md §5).
+
+2. `allgather_matmul_overlapped`: chunked all-gather -> matmul pipelining
+   via a ppermute ring — each ICI hop's weight chunk is consumed by a
+   partial matmul while the next hop is in flight.  A §Perf hillclimb
+   option for FSDP all-gathers on the critical path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+INT8_MAX = 127.0
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / INT8_MAX + 1e-20
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale.astype(F32)
+
+
+def _deq(q, s):
+    return q.astype(F32) * s
+
+
+def int8_ring_allreduce(x: jax.Array, axis: str) -> jax.Array:
+    """Inside shard_map: sum `x` (any shape, fp32) over `axis` with int8 wire
+    traffic.  Chunked ring: reduce-scatter (n-1 hops) + all-gather (n-1 hops);
+    every hop sends one int8 chunk + fp32 scale."""
+    n = jax.lax.axis_size(axis)
+    if n == 1:
+        return x
+    idx = jax.lax.axis_index(axis)
+    shape = x.shape
+    flat = x.reshape(-1).astype(F32)
+    c = -(-flat.shape[0] // n)
+    flat = jnp.pad(flat, (0, n * c - flat.shape[0]))
+    chunks = flat.reshape(n, c)
+    right = [(j, (j + 1) % n) for j in range(n)]
+
+    # ---- reduce-scatter: after n-1 steps, rank i owns sum of chunk (i+1)%n
+    def rs_step(t, ch):
+        send_idx = (idx - t) % n
+        q, s = quantize_int8(ch[send_idx])
+        q = jax.lax.ppermute(q, axis, right)
+        s = jax.lax.ppermute(s, axis, right)
+        recv_idx = (idx - t - 1) % n
+        return ch.at[recv_idx].add(_deq(q, s))
+
+    chunks = jax.lax.fori_loop(0, n - 1, rs_step, chunks)
+
+    # ---- all-gather of the owned (fully reduced) chunks: each owner
+    # quantizes ONCE; the same int8 payload is forwarded around the ring so
+    # every rank ends bit-identical (one quantization error in this phase).
+    q0, s0 = quantize_int8(chunks[(idx + 1) % n])
+    chunks = chunks.at[(idx + 1) % n].set(_deq(q0, s0))
+
+    def ag_step(t, carry):
+        ch, q, s = carry
+        q = jax.lax.ppermute(q, axis, right)
+        s = jax.lax.ppermute(s, axis, right)
+        recv_idx = (idx - t) % n
+        return ch.at[recv_idx].set(_deq(q, s)), q, s
+
+    chunks, _, _ = jax.lax.fori_loop(0, n - 1, ag_step, (chunks, q0, s0))
+    return chunks.reshape(-1)[: _size(shape)].reshape(shape)
+
+
+def _size(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def compressed_psum_grads(grads, residuals, axis: str):
+    """Inside shard_map: mean-all-reduce `grads` over `axis` in int8 with
+    sender-side error feedback.  Returns (reduced grads, new residuals)."""
+    n = jax.lax.axis_size(axis)
+
+    def one(g, r):
+        gf = g.astype(F32) + r
+        q, s = quantize_int8(gf)
+        contrib = _deq(q, s)
+        new_r = gf - contrib                    # error feedback
+        tot = int8_ring_allreduce(contrib, axis)
+        return (tot / n).astype(g.dtype), new_r
+
+    pairs = jax.tree.map(one, grads, residuals)
+    new_g = jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_r
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+
+# ---------------------------------------------------------------------------
+def allgather_matmul_overlapped(x: jax.Array, w_shard: jax.Array, axis: str):
+    """Inside shard_map: y = x @ all_gather(w_shard, axis) with the gather
+    pipelined against partial matmuls via a ppermute ring.
+
+    w is sharded on its FIRST (contraction) dim; x: full (m, k) activation;
+    w_shard: (k/n, f).  Each step multiplies the chunk currently held while
+    the next chunk is in flight.
+    """
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    k_shard = w_shard.shape[0]
+    left = [(j, (j - 1) % n) for j in range(n)]
+
+    def body(i, carry):
+        acc, w_cur = carry
+        src = (idx + i) % n
+        x_chunk = jax.lax.dynamic_slice_in_dim(x, src * k_shard, k_shard, axis=1)
+        acc = acc + jnp.einsum("mk,kf->mf", x_chunk.astype(F32),
+                               w_cur.astype(F32))
+        w_nxt = jax.lax.ppermute(w_cur, axis, left)
+        return acc, w_nxt
+
+    acc = jnp.zeros((x.shape[0], w_shard.shape[1]), F32)
+    acc, _ = jax.lax.fori_loop(0, n, body, (acc, w_shard))
+    return acc.astype(x.dtype)

@@ -1,0 +1,115 @@
+"""Logical-axis sharding rules -> NamedSharding trees.
+
+Model code declares per-dim *logical* axes on every ParamSpec
+("embed", "heads", "mlp", "experts", "vocab", "batch", ...).  This module
+maps them onto the production mesh:
+
+    TP/EP axes ("heads","mlp","experts","vocab","ssm_inner","rnn",...)  -> "model"
+    FSDP axis  ("embed")                                   -> ("pod","data")
+    DP axis    ("batch")                                   -> ("pod","data")
+
+XLA requires evenly divisible shardings for jit arguments, so resolution is
+per-array: any dim whose size is not divisible by the assigned mesh-axis
+product falls back to replication (None).  This is how MQA KV projections
+(kv_heads=1) and qwen2.5's 40 q-heads on a 16-way model axis are handled —
+recorded per-arch in the roofline notes (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# logical axis -> role
+TP_AXES = ("heads", "kv_heads", "mlp", "experts", "vocab", "ssm_inner", "rnn",
+           "kv_seq")
+FSDP_AXES = ("embed",)
+DP_AXES = ("batch",)
+
+
+def dp_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    names = [n for n in ("pod", "data") if n in mesh.axis_names]
+    return tuple(names)
+
+
+def tp_axis_name(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def axis_size(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    return int(np.prod([mesh.shape[n] for n in names])) if names else 1
+
+
+def resolve_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                  mesh: Mesh, *, fsdp: bool = True, tp: bool = True,
+                  overrides: Optional[Dict[str, Any]] = None) -> P:
+    """Per-dim resolution with divisibility fallback to replication.
+    `overrides` maps a logical axis name directly to mesh axes (tuple/str/
+    None) — used by e.g. the 2D-TP decode plan ("kv_seq" -> (model, data),
+    "batch" -> None)."""
+    dp = dp_axis_names(mesh)
+    tpa = tp_axis_name(mesh)
+    spec = []
+    used: set = set()
+    for dim, ax in zip(shape, axes):
+        assign: Any = None
+        if overrides is not None and ax in overrides:
+            cand = overrides[ax]
+            cand_t = (cand,) if isinstance(cand, str) else tuple(cand or ())
+            if cand_t and not (set(cand_t) & used):
+                assign = cand if isinstance(cand, str) else cand_t
+        elif ax in TP_AXES and tp and tpa and tpa not in used:
+            assign = tpa
+        elif ax in FSDP_AXES and fsdp and dp and not (set(dp) & used):
+            assign = dp if len(dp) > 1 else dp[0]
+        elif ax in DP_AXES and dp and not (set(dp) & used):
+            assign = dp if len(dp) > 1 else dp[0]
+        if assign is not None and dim % axis_size(mesh, assign) != 0:
+            assign = None
+        if assign is not None:
+            used.update([assign] if isinstance(assign, str) else assign)
+        spec.append(assign)
+    # trim trailing Nones
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def sharding_tree(logical_tree, shape_tree, mesh: Mesh, *, fsdp: bool = True,
+                  tp: bool = True, overrides: Optional[Dict[str, Any]] = None):
+    """logical_tree: tree of per-dim axis tuples; shape_tree: matching tree of
+    ShapeDtypeStructs (or arrays).  Returns tree of NamedSharding."""
+    def one(axes, sds):
+        return NamedSharding(mesh, resolve_pspec(sds.shape, axes, mesh,
+                                                 fsdp=fsdp, tp=tp,
+                                                 overrides=overrides))
+    # logical axes leaves are tuples — match against shape tree structure
+    return jax.tree.map(one, logical_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_sharding(mesh: Mesh, batch_size: int) -> NamedSharding:
+    dp = dp_axis_names(mesh)
+    if dp and batch_size % axis_size(mesh, dp) == 0:
+        return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+    return NamedSharding(mesh, P())
+
+
+def batch_tree_sharding(mesh: Mesh, batch_tree):
+    """Shard dim 0 (batch) of every leaf in an input batch dict."""
+    def one(sds):
+        return batch_sharding(mesh, sds.shape[0])
+    return jax.tree.map(one, batch_tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,158 @@
+"""Public jit'd kernel API with backend dispatch.
+
+Modes (ModelConfig.kernels):
+  "auto"   -> Pallas kernels on TPU, pure-XLA paths elsewhere (CPU dev
+              container, dry-run AOT compiles on host devices)
+  "xla"    -> always pure-XLA
+  "pallas" -> always Pallas (tests pass interpret=True on CPU)
+
+`flash_attention` is differentiable: Pallas forward (o, lse) + a chunked
+pure-XLA backward (recompute-per-KV-block, flash-style memory) wired via
+jax.custom_vjp.  Layout: (B, S, H, D) to match the model stack.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as FA
+from repro.kernels import decode_attention as DA
+from repro.kernels import ssm_scan as SS
+from repro.kernels import rmsnorm as RN
+from repro.kernels import moe_gemm as GG
+from repro.kernels import xent as XE
+
+F32 = jnp.float32
+
+
+def use_pallas(mode: str = "auto") -> bool:
+    if mode == "pallas":
+        return True
+    if mode == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention, differentiable, (B, S, H, D) layout
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, scale: Optional[float] = None,
+                    interpret: bool = False):
+    """q: (B,Sq,H,D); k,v: (B,Sk,Hkv,D) -> (B,Sq,H,D)."""
+    o, _ = _fa_fwd_impl(q, k, v, causal, scale, interpret)
+    return o
+
+
+def _fa_fwd_impl(q, k, v, causal, scale, interpret):
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o, lse = FA.flash_attention_fwd(qt, kt, vt, causal=causal, scale=scale,
+                                    interpret=interpret)
+    return o.transpose(0, 2, 1, 3), lse
+
+
+def _fa_fwd(q, k, v, causal, scale, interpret):
+    o, lse = _fa_fwd_impl(q, k, v, causal, scale, interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, scale, interpret, res, do):
+    q, k, v, o, lse = res
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    # (B, Hkv, G, S, D) views, fp32 math
+    qf = q.astype(F32).reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    kf = k.astype(F32).transpose(0, 2, 1, 3)                    # (B,Hkv,Sk,D)
+    vf = v.astype(F32).transpose(0, 2, 1, 3)
+    dof = do.astype(F32).reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    of = o.astype(F32).reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    lsef = lse.reshape(b, hkv, g, sq)
+    dsum = jnp.sum(dof * of, axis=-1)                           # (B,Hkv,G,Sq)
+
+    chunk = 1024
+    nq = -(-sq // chunk)
+    pad = nq * chunk - sq
+    if pad:
+        def padq(t):
+            return jnp.pad(t, ((0, 0), (0, 0), (0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 4))
+        qf, dof, lsef, dsum = padq(qf), padq(dof), padq(lsef), padq(dsum)
+    qc = jnp.moveaxis(qf.reshape(b, hkv, g, nq, chunk, d), 3, 0)
+    doc = jnp.moveaxis(dof.reshape(b, hkv, g, nq, chunk, d), 3, 0)
+    lsec = jnp.moveaxis(lsef.reshape(b, hkv, g, nq, chunk), 3, 0)
+    dsc = jnp.moveaxis(dsum.reshape(b, hkv, g, nq, chunk), 3, 0)
+    kpos = jnp.arange(sk, dtype=jnp.int32)
+
+    def body(carry, inp):
+        dk_acc, dv_acc = carry
+        ci, q_c, do_c, lse_c, ds_c = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q_c, kf) * sc
+        if causal:
+            qpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            mask = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jnp.exp(s - lse_c[..., None])                       # (B,Hkv,G,cq,Sk)
+        dv_acc = dv_acc + jnp.einsum("bhgqk,bhgqd->bhkd", p, do_c)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_c, vf)
+        ds = p * (dp - ds_c[..., None]) * sc
+        dq_c = jnp.einsum("bhgqk,bhkd->bhgqd", ds, kf)
+        dk_acc = dk_acc + jnp.einsum("bhgqk,bhgqd->bhkd", ds, q_c)
+        return (dk_acc, dv_acc), dq_c
+
+    init = (jnp.zeros((b, hkv, sk, d), F32), jnp.zeros((b, hkv, sk, d), F32))
+    (dk, dv), dqs = jax.lax.scan(
+        body, init, (jnp.arange(nq), qc, doc, lsec, dsc))
+    dq = jnp.moveaxis(dqs, 0, 3).reshape(b, hkv, g, nq * chunk, d)[:, :, :, :sq]
+    dq = dq.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    dk = dk.transpose(0, 2, 1, 3).astype(k.dtype)
+    dv = dv.transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# thin dispatch wrappers
+# ---------------------------------------------------------------------------
+def decode_attention(q, k, v, length, *, mode: str = "auto", interpret: bool = False):
+    """q: (B,H,D); k,v: (B,Sk,Hkv,D); length scalar."""
+    if use_pallas(mode) or interpret:
+        return DA.decode_attention(q, k, v, length, interpret=interpret)
+    from repro.kernels import ref
+    return ref.decode_attention_ref(q, k, v, length)
+
+
+def ssm_scan(a, b, *, mode: str = "auto", interpret: bool = False):
+    if use_pallas(mode) or interpret:
+        return SS.ssm_scan(a, b, interpret=interpret)
+    from repro.kernels import ref
+    return ref.ssm_scan_ref(a, b)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, mode: str = "auto",
+            interpret: bool = False):
+    if use_pallas(mode) or interpret:
+        return RN.rmsnorm(x, scale, eps=eps, interpret=interpret)
+    from repro.kernels import ref
+    return ref.rmsnorm_ref(x, scale, eps)
+
+
+def grouped_gemm(x, w, block_ids, *, block_m: int = 128, mode: str = "auto",
+                 interpret: bool = False):
+    return GG.grouped_gemm(x, w, block_ids, block_m=block_m, interpret=interpret)
+
+
+def blocked_xent(x, emb, labels, *, mode: str = "auto", interpret: bool = False):
+    if use_pallas(mode) or interpret:
+        return XE.blocked_xent(x, emb, labels, interpret=interpret)
+    from repro.kernels import ref
+    return ref.blocked_xent_ref(x, emb, labels)

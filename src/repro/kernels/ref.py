@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately naive/obvious implementations — O(S^2) attention with
+materialized scores, step-by-step scans — used by tests/test_kernels.py to
+validate the kernels in interpret mode across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: Optional[float] = None,
+                        window: int = 0) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D). Returns (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), k.astype(F32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    ok = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        ok &= kpos <= qpos + (k.shape[2] - sq)   # offset when Sk > Sq
+    if window > 0:
+        ok &= (qpos + (k.shape[2] - sq)) - kpos < window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(F32)).astype(q.dtype)
+
+
+def flash_attention_lse_ref(q, k, v, *, causal: bool = True,
+                            scale: Optional[float] = None):
+    """Also return logsumexp (B, H, Sq) fp32 — for the bwd pass contract."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), kk.astype(F32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(kk.shape[2])[None, :]
+    if causal:
+        ok = kpos <= qpos + (kk.shape[2] - sq)
+        s = jnp.where(ok[None, None], s, NEG_INF)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lse[..., None])
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(F32))
+    return o.astype(q.dtype), lse
+
+
+def decode_attention_ref(q, k, v, length) -> jax.Array:
+    """q: (B, H, D); k, v: (B, Sk, Hkv, D); length: valid prefix len (scalar).
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    kk = jnp.repeat(k, g, axis=2)                      # (B, Sk, H, D)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(F32), kk.astype(F32)) * scale
+    valid = jnp.arange(k.shape[1]) < length
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vv.astype(F32)).astype(q.dtype)
+
+
+def ssm_scan_ref(a, b, h0=None) -> Tuple[jax.Array, jax.Array]:
+    """Diagonal linear recurrence h_t = a_t*h_{t-1} + b_t.
+    a, b: (B, T, C). Returns (hs (B,T,C) fp32, h_final (B,C) fp32)."""
+    B, T, C = a.shape
+    h = jnp.zeros((B, C), F32) if h0 is None else h0.astype(F32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at.astype(F32) * h + bt.astype(F32)
+        return h, h
+
+    h_final, hs = jax.lax.scan(step, h, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_final
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6) -> jax.Array:
+    """x: (T, d); scale: (d,)."""
+    xf = x.astype(F32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def grouped_gemm_ref(x, w, group_sizes) -> jax.Array:
+    """x: (T, d) rows grouped by expert (sizes sum to T); w: (E, d, f).
+    Row i belongs to expert e where cumsum(group_sizes) gives boundaries.
+    Returns (T, f)."""
+    t, d = x.shape
+    e = w.shape[0]
+    bounds = jnp.cumsum(group_sizes)
+    rows = jnp.arange(t)
+    gid = jnp.sum(rows[:, None] >= bounds[None, :], axis=1)  # (T,)
+    wg = w[gid]                                              # (T, d, f) gather
+    return jnp.einsum("td,tdf->tf", x.astype(F32), wg.astype(F32)).astype(x.dtype)
+
+
+def blocked_xent_ref(x, emb, labels) -> jax.Array:
+    """Full-logits CE oracle. x: (T,d), emb: (V,d), labels: (T,). fp32 nll (T,)."""
+    logits = jnp.einsum("td,vd->tv", x.astype(F32), emb.astype(F32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - ll

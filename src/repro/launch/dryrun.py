@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell
+on 512 placeholder host devices, and extract the roofline terms.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init) — which is why this module sets XLA_FLAGS at the very
+top and why smoke tests/benches never import it.
+
+Per cell:
+    lowered  = jit(step, in_shardings=..., out_shardings=...).lower(*specs)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis            -> bytes, FLOPs
+    parse compiled HLO for collective bytes    -> all-gather/all-reduce/
+                                                  reduce-scatter/all-to-all/
+                                                  collective-permute operand sums
+Everything is ShapeDtypeStruct-driven: no array is ever materialized.
+Results are written as JSON (one file per cell) for benchmarks/roofline.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cell_is_applicable, get_config
+from repro.configs.base import ModelConfig, ShapeConfig, model_flops
+from repro.distributed.sharding import (batch_tree_sharding, replicated,
+                                        sharding_tree)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.models import param as PRM
+from repro.optim.adamw import AdamWConfig
+from repro.training.step import abstract_train_state, make_train_step
+
+# v5e-class constants (assignment)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if shape.kind in ("train", "prefill"):
+        if cfg.encdec:
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16),
+                    "tokens": jax.ShapeDtypeStruct((b, cfg.dec_train_len), i32)}
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), bf16)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Sum operand bytes of collective ops in compiled (post-SPMD) HLO."""
+    dt_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8}
+    totals = {k: 0.0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    # lines like:  %all-gather.3 = bf16[4,128,512]{...} all-gather(...)
+    pat = re.compile(r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo.splitlines():
+        op = None
+        for c in COLLECTIVE_OPS:
+            if f" {c}(" in line or f" {c}-start(" in line:
+                op = c
+                break
+        if op is None:
+            continue
+        m = pat.search(line)
+        if not m:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        size = dt_bytes.get(dt, 2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        totals[op] += n * size
+        counts[op] += 1
+    out = {f"{k}_bytes": v for k, v in totals.items()}
+    out.update({f"{k}_count": counts[k] for k in COLLECTIVE_OPS})
+    out["collective_bytes"] = sum(totals.values())
+    return out
+
+
+def _cost_get(ca: dict, key: str) -> float:
+    try:
+        return float(ca.get(key, 0.0) or 0.0)
+    except Exception:
+        return 0.0
+
+
+# ---------------------------------------------------------------------------
+def _lower_and_compile(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """One AOT lower+compile of (cfg, shape) on mesh. Returns (compiled, t_lower,
+    t_compile)."""
+    from repro.models import layers as L
+    L.set_activation_sharding(mesh, sp=bool(int(os.environ.get("REPRO_SP", "0"))))
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+    grad_accum = int(os.environ.get("REPRO_GRAD_ACCUM", "1"))
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(state_dtype="bfloat16")
+            state = abstract_train_state(model, opt_cfg)
+            pshard = sharding_tree(model.logical_axes(), model.abstract_params(),
+                                   mesh)
+            state_shard = {"params": pshard,
+                           "opt": {"m": pshard, "v": pshard,
+                                   "step": replicated(mesh)}}
+            bshard = batch_tree_sharding(mesh, specs)
+            step_fn = make_train_step(model, opt_cfg, grad_accum=grad_accum)
+            jitted = jax.jit(step_fn, in_shardings=(state_shard, bshard),
+                             out_shardings=(state_shard, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, specs)
+        elif shape.kind == "prefill":
+            pshard = sharding_tree(model.logical_axes(), model.abstract_params(),
+                                   mesh)
+            bshard = batch_tree_sharding(mesh, specs)
+            jitted = jax.jit(model.prefill, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(model.abstract_params(), specs)
+        else:  # decode / long_decode: serve_step against a seq_len cache
+            cache_over = None
+            if cfg.decode_2d_tp:
+                # 2D TP decode plan: weights sharded (model x data) as usual,
+                # batch REPLICATED (no dim competes with "data"), cache seq
+                # sharded over both axes -> GSPMD emits tiny activation psums
+                # instead of per-layer FSDP weight all-gathers.
+                dpn = [a for a in ("pod", "data") if a in mesh.axis_names]
+                cache_over = {"kv_seq": ("model",) + tuple(dpn), "batch": None}
+                # residual stream feature-sharded over "data" => activation
+                # psums (4 MB) instead of weight all-gathers (GB)
+                L.set_activation_sharding(mesh, mode="feature")
+            pshard = sharding_tree(model.logical_axes(), model.abstract_params(),
+                                   mesh)
+            cache = model.cache_abstract(shape.global_batch, shape.seq_len)
+            cshard = sharding_tree(model.cache_logical_axes(
+                shape.global_batch, shape.seq_len), cache, mesh,
+                overrides=cache_over)
+            bshard = batch_tree_sharding(mesh, specs) if not cfg.decode_2d_tp \
+                else jax.tree.map(lambda _: replicated(mesh), specs)
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def serve_step(params, cache, tokens, index):
+                return model.decode_step(params, cache, tokens, index)
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(pshard, cshard, bshard["tokens"],
+                                           replicated(mesh)),
+                             out_shardings=(None, cshard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(model.abstract_params(), cache,
+                                   specs["tokens"], idx)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _extract_costs(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    flops = _cost_get(ca, "flops")
+    hbm_bytes = _cost_get(ca, "bytes accessed")
+    if hbm_bytes == 0.0:
+        hbm_bytes = sum(v for k, v in ca.items()
+                        if isinstance(v, (int, float)) and "bytes accessed" in k)
+    return {"hlo_flops": flops, "hlo_bytes": hbm_bytes, **coll}
+
+
+def _depth_pair(cfg: ModelConfig):
+    """Two shallow UNROLLED variants for per-layer cost differencing, plus
+    unit counts (u1, u2, u_full).  XLA cost analysis counts a scanned loop
+    body ONCE regardless of trip count, so per-layer costs must come from
+    unrolled shallow compiles and linear extrapolation (EXPERIMENTS.md
+    §Dry-run, methodology note)."""
+    plen = len(cfg.block_pattern)
+    if cfg.encdec:
+        mk = lambda L: dataclasses.replace(cfg, num_layers=L, enc_layers=L,
+                                           dec_layers=L, use_scan=False)
+        return mk(2), mk(4), 2, 4, cfg.enc_layers
+    if cfg.moe is not None and cfg.moe.layer_mode == "all_but_first":
+        mk = lambda L: dataclasses.replace(cfg, num_layers=1 + L, use_scan=False)
+        return mk(2), mk(4), 2, 4, cfg.num_layers - 1
+    if plen > 1:
+        # pattern units (e.g. recurrentgemma (r,r,local)); tail counted
+        # fractionally
+        mk = lambda U: dataclasses.replace(cfg, num_layers=U * plen,
+                                           use_scan=False)
+        u_full = cfg.num_layers / plen
+        return mk(2), mk(4), 2, 4, u_full
+    mk = lambda L: dataclasses.replace(cfg, num_layers=L, use_scan=False)
+    return mk(2), mk(4), 2, 4, cfg.num_layers
+
+
+def _extrapolate(c1: Dict[str, float], c2: Dict[str, float],
+                 u1: float, u2: float, u_full: float) -> Dict[str, float]:
+    out = {}
+    for k in c1:
+        slope = (c2[k] - c1[k]) / (u2 - u1)
+        out[k] = c1[k] + (u_full - u1) * slope
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: Optional[dict] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    base_kw = dict(remat="full", use_scan=True)
+    base_kw.update(overrides or {})
+    cfg = dataclasses.replace(cfg, **base_kw)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    # 1) full scanned compile: proves the cell compiles; peak-memory analysis
+    compiled_full, t_lower, t_compile = _lower_and_compile(cfg, shape, mesh)
+    mem = compiled_full.memory_analysis()
+    mem_dict = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        mem_dict[attr] = getattr(mem, attr, None)
+    full_costs_scanned = _extract_costs(compiled_full)
+    del compiled_full
+
+    # 2) depth-differenced costs from UNROLLED shallow compiles in
+    #    exact-costing mode (scan bodies are undercounted by cost analysis)
+    from repro.models import layers as L
+    cfg1, cfg2, u1, u2, u_full = _depth_pair(cfg)
+    L.set_costing_mode(True)
+    try:
+        comp1, _, t_c1 = _lower_and_compile(cfg1, shape, mesh)
+        c1 = _extract_costs(comp1)
+        del comp1
+        comp2, _, t_c2 = _lower_and_compile(cfg2, shape, mesh)
+        c2 = _extract_costs(comp2)
+        del comp2
+    finally:
+        L.set_costing_mode(False)
+    costs = _extrapolate(c1, c2, u1, u2, u_full)
+
+    flops = costs["hlo_flops"]
+    hbm_bytes = costs["hlo_bytes"]
+    coll_bytes = costs["collective_bytes"]
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get).replace("_s", "")
+
+    mf = model_flops(cfg, shape)          # MODEL_FLOPS global
+    hlo_flops_global = flops * chips
+    useful = mf / hlo_flops_global if hlo_flops_global else 0.0
+
+    model = build_model(cfg)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "multi_pod": multi_pod, "chips": chips, "status": "ok",
+        "params": model.param_count(),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "compile_shallow_s": round(t_c1 + t_c2, 1),
+        "per_chip": {
+            "hlo_flops": flops, "hlo_bytes": hbm_bytes,
+            "collective_bytes": coll_bytes,
+        },
+        "per_chip_scanned_raw": full_costs_scanned,
+        "collectives": {k: costs.get(k) for k in costs if k != "hlo_flops"
+                        and k != "hlo_bytes"},
+        "memory_analysis": mem_dict,
+        "roofline": {
+            **terms,
+            "bottleneck": bottleneck,
+            "model_flops_global": mf,
+            "useful_flops_ratio": useful,
+            "step_seconds": max(terms.values()),
+        },
+        "overrides": overrides or {},
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of ModelConfig overrides (hillclimbing)")
+    args = ap.parse_args()
+    overrides = json.loads(args.overrides) if args.overrides else None
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, overrides)
+    except Exception as e:  # report failures as data, not crashes
+        import traceback
+        rec = {"arch": args.arch, "shape": args.shape,
+               "multi_pod": args.multi_pod, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    js = json.dumps(rec, indent=2, default=float)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(js)
+    print(js if rec.get("status") != "ok" else
+          json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "mesh", "status", "compile_s",
+                       "roofline")}, indent=2, default=float))
+    if rec.get("status") == "ok":
+        print("memory_analysis:", rec["memory_analysis"])
+        print("cost_analysis per chip:", rec["per_chip"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Run every (arch x shape x mesh) dry-run cell in subprocesses (the 512
+host-device XLA_FLAGS must be set per-process before jax import, and
+compile state must not accumulate).  Caches JSON per cell; re-runs only
+missing/failed cells.  Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun_all [--out experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ARCH_NAMES, SHAPES, cell_is_applicable, get_config
+
+
+def cell_list():
+    cells = []
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            for multi_pod in (False, True):
+                cells.append((arch, shape, multi_pod))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter arch:shape")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = cell_list()
+    # single-pod first (roofline table), then multi-pod
+    cells.sort(key=lambda c: (c[2], c[0], c[1]))
+    t_start = time.time()
+    for i, (arch, shape, mp) in enumerate(cells):
+        mesh = "pod2x16x16" if mp else "pod16x16"
+        name = f"{arch}.{shape}.{mesh}"
+        if args.only and args.only not in name:
+            continue
+        path = os.path.join(args.out, name + ".json")
+        if os.path.exists(path) and not args.force:
+            try:
+                with open(path) as f:
+                    rec = json.load(f)
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"[{i+1}/{len(cells)}] {name}: cached {rec['status']}")
+                    continue
+            except Exception:
+                pass
+        cfg = get_config(arch)
+        ok, reason = cell_is_applicable(cfg, SHAPES[shape])
+        if not ok:
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "multi_pod": mp,
+                           "mesh": mesh, "status": "skipped",
+                           "reason": reason}, f, indent=2)
+            print(f"[{i+1}/{len(cells)}] {name}: skipped ({reason[:60]})")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", path]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        print(f"[{i+1}/{len(cells)}] {name}: compiling ...", flush=True)
+        try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env=dict(os.environ, PYTHONPATH="src"))
+            if p.returncode != 0:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "multi_pod": mp,
+                               "mesh": mesh, "status": "error",
+                               "error": (p.stderr or p.stdout)[-1500:]},
+                              f, indent=2)
+        except subprocess.TimeoutExpired:
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "multi_pod": mp,
+                           "mesh": mesh, "status": "timeout"}, f, indent=2)
+        with open(path) as f:
+            rec = json.load(f)
+        dt = time.time() - t0
+        extra = ""
+        if rec.get("status") == "ok":
+            r = rec["roofline"]
+            extra = (f" bottleneck={r['bottleneck']}"
+                     f" step={r['step_seconds']:.3f}s"
+                     f" useful={r['useful_flops_ratio']:.2f}")
+        print(f"[{i+1}/{len(cells)}] {name}: {rec.get('status')} "
+              f"({dt:.0f}s){extra}", flush=True)
+    print(f"total {time.time()-t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Dry-run / §Roofline
+tables (markdown to stdout).
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCH_NAMES, SHAPES
+
+V5E_HBM = 16e9  # bytes per chip
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    for u in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{u}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def fmt_f(x, nd=3):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) < 0.001:
+        return f"{x:.1e}"
+    return f"{x:.{nd}f}"
+
+
+def load(dirname):
+    recs = {}
+    for f in glob.glob(os.path.join(dirname, "*.json")):
+        try:
+            r = json.load(open(f))
+        except Exception:
+            continue
+        if "arch" in r:
+            recs[(r["arch"], r["shape"], r.get("mesh",
+                  "pod2x16x16" if r.get("multi_pod") else "pod16x16"))] = r
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    lines = [
+        f"### Mesh {mesh}",
+        "",
+        "| arch | shape | status | compile (s) | params | temp/chip | args/chip "
+        "| HLO GFLOP/chip | HLO GB/chip | coll GB/chip | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                reason = r.get("reason", r.get("error", ""))[:60]
+                lines.append(f"| {arch} | {shape} | {r['status']} "
+                             f"({reason}) | | | | | | | |")
+                continue
+            m = r["memory_analysis"]
+            pc = r["per_chip"]
+            temp = m.get("temp_size_in_bytes")
+            args = m.get("argument_size_in_bytes")
+            fits = "yes" if (temp or 0) + (args or 0) < V5E_HBM else "NO"
+            lines.append(
+                f"| {arch} | {shape} | ok | {r.get('compile_s', '-')} "
+                f"| {r['params']/1e9:.2f}B | {fmt_bytes(temp)} | {fmt_bytes(args)} "
+                f"| {pc['hlo_flops']/1e9:.0f} | {pc['hlo_bytes']/1e9:.0f} "
+                f"| {pc['collective_bytes']/1e9:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck "
+        "| MODEL_FLOPS | useful ratio | step (s) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, "pod16x16"))
+            if r is None or r["status"] != "ok":
+                status = "missing" if r is None else r["status"]
+                if status == "skipped":
+                    lines.append(f"| {arch} | {shape} | skipped | | | | | | |")
+                else:
+                    lines.append(f"| {arch} | {shape} | {status} | | | | | | |")
+                continue
+            ro = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt_f(ro['compute_s'])} "
+                f"| {fmt_f(ro['memory_s'])} | {fmt_f(ro['collective_s'])} "
+                f"| **{ro['bottleneck']}** | {ro['model_flops_global']:.2e} "
+                f"| {ro['useful_flops_ratio']:.2f} | {fmt_f(ro['step_seconds'])} |")
+    return "\n".join(lines)
+
+
+def summarize(recs):
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    bad = sum(1 for r in recs.values() if r["status"] not in ("ok", "skipped"))
+    return f"{ok} ok, {skip} skipped (documented), {bad} failed, of {len(recs)}"
+
+
+def pod_scaling_table(recs):
+    """Weak-scaling 256 -> 512 chips at fixed global work: ideal per-chip
+    step time halves (efficiency 1.0 = step256 / (2 * step512))."""
+    lines = [
+        "| arch | shape | step 256c (s) | step 512c (s) | scaling eff. "
+        "| coll/chip ratio |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            a = recs.get((arch, shape, "pod16x16"))
+            b = recs.get((arch, shape, "pod2x16x16"))
+            if not a or not b or a["status"] != "ok" or b["status"] != "ok":
+                continue
+            s1 = a["roofline"]["step_seconds"]
+            s2 = b["roofline"]["step_seconds"]
+            eff = s1 / (2.0 * s2) if s2 else 0.0
+            c1 = a["per_chip"]["collective_bytes"] or 1.0
+            c2 = b["per_chip"]["collective_bytes"]
+            lines.append(f"| {arch} | {shape} | {fmt_f(s1)} | {fmt_f(s2)} "
+                         f"| {eff:.2f} | {c2 / c1:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(f"## Dry-run summary: {summarize(recs)}\n")
+    print(dryrun_table(recs, "pod16x16"))
+    print()
+    print(dryrun_table(recs, "pod2x16x16"))
+    print()
+    print("## Roofline (single-pod 16x16, per-chip terms)\n")
+    print(roofline_table(recs))
+    print()
+    print("## Pod scaling (256 -> 512 chips, fixed global work)\n")
+    print(pod_scaling_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Production serving entry point (see examples/serving.py for the tour).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core import CarinaController, RunTracker, SimClock
+from repro.models import build_model
+from repro.models import layers as L
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    L.set_kernel_mode("auto")
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tracker = RunTracker(f"serve-{cfg.name}")
+    engine = ServingEngine(model, params, slots=args.slots, s_max=args.s_max,
+                           controller=CarinaController(
+                               tracker=tracker, max_replicas=1,
+                               clock=SimClock(start_hour=12.0)))
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        engine.submit(rng.integers(0, cfg.vocab_size,
+                                   size=rng.integers(4, 16)).astype(np.int32),
+                      max_new=args.max_new)
+    done = engine.run_until_drained()
+    s = tracker.close()
+    print(f"completed {len(done)} requests; energy {s.energy_kwh*1e3:.3f} Wh; "
+          f"CO2e {s.co2_kg*1e3:.3f} g")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, S_frames, d) supplied by input_specs().
+Norms are scale-only (RMS); positional encoding is sinusoidal (added).
+
+Cache layout for decode: per decoder layer {self: {k,v}, cross: {k,v}} —
+cross K/V are computed once (from encoder output) at prefill time.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamSpec, SpecTree
+from repro.models.transformer import _stack_spec, _remat
+
+F32 = jnp.float32
+
+
+def _scan_layers(body, x, stacked, use_scan: bool, n: int):
+    """lax.scan over stacked layer params, or a python loop when unrolled
+    (cfg.use_scan=False — exact-costing depth pairs)."""
+    if use_scan:
+        x, ys = jax.lax.scan(body, x, stacked)
+        return x, ys
+    ys = []
+    for i in range(n):
+        pl = jax.tree.map(lambda t: t[i], stacked)
+        x, y = body(x, pl)
+        ys.append(y)
+    ys = None if ys and ys[0] is None else (
+        jax.tree.map(lambda *ts: jnp.stack(ts), *ys) if ys else None)
+    return x, ys
+
+
+# ---------------------------------------------------------------------------
+def enc_block_spec(cfg: ModelConfig) -> SpecTree:
+    return {"norm1": L.norm_spec(cfg.d_model), "attn": L.attn_spec(cfg),
+            "norm2": L.norm_spec(cfg.d_model), "ffn": L.mlp_spec(cfg)}
+
+
+def dec_block_spec(cfg: ModelConfig) -> SpecTree:
+    d = cfg.d_model
+    return {"norm1": L.norm_spec(d), "self_attn": L.attn_spec(cfg),
+            "norm2": L.norm_spec(d), "cross_attn": L.attn_spec(cfg),
+            "norm3": L.norm_spec(d), "ffn": L.mlp_spec(cfg)}
+
+
+def encdec_spec(cfg: ModelConfig) -> SpecTree:
+    d, v = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), init="normal"),
+        "enc": _stack_spec(enc_block_spec(cfg), cfg.enc_layers),
+        "enc_norm": L.norm_spec(d),
+        "dec": _stack_spec(dec_block_spec(cfg), cfg.dec_layers),
+        "dec_norm": L.norm_spec(d),
+    }
+
+
+# ---------------------------------------------------------------------------
+def encode(frames: jax.Array, p: SpecTree, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, S, d) stub frame embeddings -> encoder states (B, S, d)."""
+    x = frames + L.sinusoid_embedding(frames.shape[1], cfg.d_model).astype(frames.dtype)[None]
+
+    def body(xc, pl):
+        h = L.rms_norm(xc, pl["norm1"], cfg.norm_eps)
+        o, _ = L.attn_block(h, pl["attn"], cfg, causal=False)
+        xc = L.shard_batch(xc + o)
+        h = L.rms_norm(xc, pl["norm2"], cfg.norm_eps)
+        xc = L.shard_batch(xc + L.mlp_block(h, pl["ffn"], cfg))
+        return xc, None
+
+    x, _ = _scan_layers(_remat(body, cfg.remat), x, p["enc"], cfg.use_scan,
+                        cfg.enc_layers)
+    return L.rms_norm(x, p["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(xc, pl, cfg, enc_kv, positions):
+    h = L.rms_norm(xc, pl["norm1"], cfg.norm_eps)
+    o, self_kv = L.attn_block(h, pl["self_attn"], cfg, causal=True, positions=positions)
+    xc = L.shard_batch(xc + o)
+    h = L.rms_norm(xc, pl["norm2"], cfg.norm_eps)
+    o, _ = L.attn_block(h, pl["cross_attn"], cfg, cross_kv=enc_kv(pl))
+    xc = xc + o
+    h = L.rms_norm(xc, pl["norm3"], cfg.norm_eps)
+    xc = L.shard_batch(xc + L.mlp_block(h, pl["ffn"], cfg))
+    return xc, self_kv
+
+
+def decode_train(tokens: jax.Array, enc_out: jax.Array, p: SpecTree,
+                 cfg: ModelConfig) -> jax.Array:
+    """Teacher-forced decoder pass -> logits (B, S_dec, V)."""
+    x = L.shard_batch(p["embed"][tokens]
+                      + L.sinusoid_embedding(tokens.shape[1], cfg.d_model
+                                             ).astype(jnp.bfloat16)[None])
+
+    def enc_kv(pl):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, pl["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, pl["cross_attn"]["wv"])
+        return k, v
+
+    def body(xc, pl):
+        xc, _ = _dec_block(xc, pl, cfg, enc_kv, None)
+        return xc, None
+
+    x, _ = _scan_layers(_remat(body, cfg.remat), x, p["dec"], cfg.use_scan,
+                        cfg.dec_layers)
+    x = L.rms_norm(x, p["dec_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,vd->bsv", x, p["embed"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+def encdec_cache_spec(cfg: ModelConfig, batch: int, s_max: int) -> SpecTree:
+    hd = cfg.resolved_head_dim
+    dt = jnp.bfloat16
+    self_shp = (batch, s_max, cfg.num_kv_heads, hd)
+    cross_shp = (batch, cfg.cross_kv_len, cfg.num_kv_heads, hd)
+    ax = ("batch", None, "kv_heads", None)
+    one = {
+        "self_k": ParamSpec(self_shp, ax, init="zeros", dtype=dt),
+        "self_v": ParamSpec(self_shp, ax, init="zeros", dtype=dt),
+        "cross_k": ParamSpec(cross_shp, ax, init="zeros", dtype=dt),
+        "cross_v": ParamSpec(cross_shp, ax, init="zeros", dtype=dt),
+    }
+    return _stack_spec(one, cfg.dec_layers)
+
+
+def build_cross_cache(enc_out: jax.Array, p: SpecTree):
+    """Precompute per-layer cross K/V from encoder output: (L, B, Skv, H, hd)."""
+    def per_layer(pl):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, pl["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, pl["cross_attn"]["wv"])
+        return k, v
+    ks, vs = jax.vmap(per_layer, in_axes=(0,))(p["dec"])
+    return ks, vs
+
+
+def decode_step(token: jax.Array, cache: SpecTree, p: SpecTree, cfg: ModelConfig,
+                index) -> Tuple[jax.Array, SpecTree]:
+    """token: (B, 1) int32; index: scalar or (B,). Returns (logits (B,1,V), cache)."""
+    b = token.shape[0]
+    idx = L._norm_index(index, b)
+    pos_emb = L.sinusoid_embedding(int(cache["self_k"].shape[2]), cfg.d_model)
+    x = p["embed"][token] + pos_emb[idx][:, None, :].astype(jnp.bfloat16)
+
+    def body(xc, xs):
+        pl, c = xs
+        h = L.rms_norm(xc, pl["norm1"], cfg.norm_eps)
+        o, kc, vc = L.attn_decode(h, pl["self_attn"], cfg, c["self_k"], c["self_v"], index)
+        xc = xc + o
+        h = L.rms_norm(xc, pl["norm2"], cfg.norm_eps)
+        o, _, _ = L.attn_decode(h, pl["cross_attn"], cfg, c["cross_k"], c["cross_v"],
+                                index, cross=True)
+        xc = xc + o
+        h = L.rms_norm(xc, pl["norm3"], cfg.norm_eps)
+        xc = xc + L.mlp_block(h, pl["ffn"], cfg)
+        return xc, {"self_k": kc, "self_v": vc,
+                    "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    if cfg.use_scan:
+        x, new_cache = jax.lax.scan(body, x, (p["dec"], cache))
+    else:
+        outs = []
+        for i in range(cfg.dec_layers):
+            pl = jax.tree.map(lambda t: t[i], p["dec"])
+            cl = jax.tree.map(lambda t: t[i], cache)
+            x, nc = body(x, (pl, cl))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+    x = L.rms_norm(x, p["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, p["embed"])
+    return logits, new_cache

@@ -1,0 +1,574 @@
+"""Core model layers: norms, rotary embeddings (RoPE / M-RoPE / sinusoid),
+softmax attention (GQA/MQA, causal/bidir/windowed, chunked flash-style),
+DeepSeek MLA (train expand path + absorbed decode path), and MLPs.
+
+Everything is functional: params are plain pytrees declared via ParamSpec.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(F32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(F32) + bias.astype(F32)).astype(dt)
+
+
+def norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), (None,), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions: (...,) int -> cos/sin (..., dim/2) in fp32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=F32) / dim))
+    ang = positions.astype(F32)[..., None] * inv_freq          # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    x = x.astype(F32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def mrope_cos_sin(positions3: jax.Array, dim: int, theta: float,
+                  sections: Tuple[int, int, int]) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE (Qwen2-VL): positions3 (3, B, S) -> cos/sin (B, S, dim/2).
+
+    The dim/2 rotary frequencies are split into `sections` (t, h, w); each
+    section rotates by its own position stream.  sum(sections) == dim//2.
+    """
+    assert sum(sections) == dim // 2, (sections, dim)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=F32) / dim))  # (dim/2,)
+    # section id per frequency
+    sec_id = jnp.concatenate([jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    pos = positions3.astype(F32).transpose(1, 2, 0)[..., sec_id]   # (B, S, dim/2)
+    ang = pos * inv_freq[None, None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def vlm_positions(batch: int, seq: int, n_vis: int, grid: Optional[int] = None) -> jax.Array:
+    """Stub M-RoPE position ids: leading n_vis tokens form a sqrt-grid image,
+    the rest are text with all three streams equal (temporal semantics)."""
+    if grid is None:
+        grid = max(int(math.sqrt(max(n_vis, 1))), 1)
+    t = jnp.arange(seq, dtype=jnp.int32)
+    is_vis = t < n_vis
+    h = jnp.where(is_vis, (t // grid) % grid, t)
+    w = jnp.where(is_vis, t % grid, t)
+    tpos = jnp.where(is_vis, 0, t)
+    p = jnp.stack([tpos, h, w])                                    # (3, S)
+    return jnp.broadcast_to(p[:, None, :], (3, batch, seq))
+
+
+def sinusoid_embedding(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=F32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=F32) * (-math.log(10000.0) / (d - 2 if d > 2 else 1)))
+    ang = pos * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked, flash-style memory behavior in pure XLA)
+# ---------------------------------------------------------------------------
+NEG_INF = -1e30
+
+# Kernel dispatch: launchers call set_kernel_mode("auto"/"pallas"/"xla").
+# On TPU with "auto", full-sequence attention routes to the Pallas flash
+# kernel (kernels/ops.py); everywhere else the chunked XLA path below runs.
+_KERNEL_MODE = "xla"
+
+
+def set_kernel_mode(mode: str) -> None:
+    global _KERNEL_MODE
+    assert mode in ("auto", "xla", "pallas"), mode
+    _KERNEL_MODE = mode
+
+
+def kernel_mode() -> str:
+    return _KERNEL_MODE
+
+
+# Exact-costing mode (dry-run shallow compiles only): XLA cost analysis
+# counts a scan/while body ONCE regardless of trip count, so for cost
+# extraction every inner scan is replaced by a statically-unrolled or
+# associative form: dense attention (no q-chunk scan), associative SSM
+# scans, single-block CE.  Never enabled for real execution or for the
+# full-model memory-analysis compile.
+_EXACT_COSTING = False
+
+
+def set_costing_mode(flag: bool) -> None:
+    global _EXACT_COSTING
+    _EXACT_COSTING = flag
+
+
+def exact_costing() -> bool:
+    return _EXACT_COSTING
+
+
+# Activation sharding constraints (set by launchers when running under a
+# mesh).  Without them GSPMD propagates the FSDP weight sharding into the
+# residual stream (d_model over the dp axes, batch replicated) — every chip
+# would then compute every sequence's attention.  `dp_axes` shards dim 0
+# (batch); `sp_axis` optionally shards dim 1 (sequence parallelism).
+_ACT_DP_AXES: tuple = ()     # ((name, size), ...)
+_ACT_SP_AXIS: tuple = ()     # (name, size) or ()
+_TP_AXIS: tuple = ()         # (name, size) or ()
+_ACT_MODE: str = "batch"     # "batch": shard dim0 over dp | "feature": shard
+                             # last dim over "data" (2D-TP decode plan)
+
+
+def set_activation_sharding(mesh=None, sp: bool = False,
+                            mode: str = "batch") -> None:
+    """Configure from a Mesh (None disables)."""
+    global _ACT_DP_AXES, _ACT_SP_AXIS, _TP_AXIS, _ACT_MODE
+    _ACT_MODE = mode
+    if mesh is None:
+        _ACT_DP_AXES, _ACT_SP_AXIS, _TP_AXIS = (), (), ()
+        return
+    _ACT_DP_AXES = tuple((n, mesh.shape[n]) for n in ("pod", "data")
+                         if n in mesh.axis_names)
+    _ACT_SP_AXIS = ("model", mesh.shape["model"]) \
+        if (sp and "model" in mesh.axis_names) else ()
+    _TP_AXIS = ("model", mesh.shape["model"]) \
+        if "model" in mesh.axis_names else ()
+
+
+def shard_batch(x: jax.Array) -> jax.Array:
+    """Constrain (B, S, ...) activations to batch-sharded (+ optional SP),
+    or feature-sharded (last dim over "data") in 2D-TP decode mode."""
+    if not _ACT_DP_AXES:
+        return x
+    from jax.sharding import PartitionSpec as P
+    if _ACT_MODE == "feature":
+        data = next((n for n, _ in _ACT_DP_AXES if n == "data"), None)
+        sz = next((s for n, s in _ACT_DP_AXES if n == "data"), 1)
+        if data is None or x.shape[-1] % sz != 0:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(*([None] * (x.ndim - 1)), data))
+    n = 1
+    for _, s in _ACT_DP_AXES:
+        n *= s
+    names = tuple(a for a, _ in _ACT_DP_AXES)
+    first = (names if len(names) > 1 else names[0]) if x.shape[0] % n == 0 else None
+    rest = [None] * (x.ndim - 1)
+    if _ACT_SP_AXIS and x.ndim >= 3 and x.shape[1] % _ACT_SP_AXIS[1] == 0:
+        rest[0] = _ACT_SP_AXIS[0]
+    if first is None and all(r is None for r in rest):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(first, *rest))
+
+
+def _pad_heads_tp(q, k, v):
+    """Head-padded TP attention (§Perf optimization for archs whose head
+    count does not divide the model axis, e.g. qwen2.5's 40 or qwen2-vl's 28
+    heads on a 16-way axis): pad the Q/K/V *activations* (KV already
+    broadcast to H) with zero heads up to a multiple of the TP size and
+    constrain the head dim onto "model".  Padding is linear and sliced off
+    after attention, so numerics and gradients of the real heads are
+    untouched — but attention compute shards 16x instead of replicating.
+    Returns (q, k, v, real_heads)."""
+    h = q.shape[2]
+    if not _TP_AXIS:
+        return q, k, v, h
+    name, tp = _TP_AXIS
+    if h % tp == 0:
+        return q, k, v, h
+    h_pad = -(-h // tp) * tp
+    from jax.sharding import PartitionSpec as P
+    dp_n = 1
+    for _, s in _ACT_DP_AXES:
+        dp_n *= s
+    dp = tuple(a for a, _ in _ACT_DP_AXES)
+    first = (dp if len(dp) > 1 else dp[0]) \
+        if (dp and q.shape[0] % dp_n == 0) else None
+
+    def pad(t):
+        t = jnp.pad(t, ((0, 0), (0, 0), (0, h_pad - t.shape[2]), (0, 0)))
+        try:
+            return jax.lax.with_sharding_constraint(t, P(first, None, name, None))
+        except RuntimeError:   # no mesh in context (single-device tests)
+            return t
+    return pad(q), pad(k), pad(v), h
+
+
+def _mask_bias(qpos: jax.Array, kpos: jax.Array, causal: bool, window: int) -> jax.Array:
+    """(Sq, Sk) additive mask bias in fp32."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(F32)
+
+
+def _attend_dense(q, k, v, qpos, kpos, causal, window, scale, softcap, kv_valid=None):
+    """q: (B,Sq,H,D) k,v: (B,Sk,H,D) (kv pre-repeated to H) -> (B,Sq,H,D).
+
+    KV heads are broadcast to the full H before this call: a (Hkv, G) split
+    of the head dim would be unshardable under TP when Hkv < mesh model
+    size (GSPMD would replicate the whole attention).  fp32 softmax."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=F32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + _mask_bias(qpos, kpos, causal, window)[None, None]
+    if kv_valid is not None:  # (B, Sk) bool — decode cache validity
+        s = s + jnp.where(kv_valid, 0.0, NEG_INF).astype(F32)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def _attend_grouped(q, k, v, scale, softcap, kv_valid):
+    """Grouped GQA attention WITHOUT broadcasting KV to H: q reshaped
+    (B,Sq,Hkv,G,D).  Used for sharded-KV-cache decode where the head dim
+    must stay replicated so the cache's seq sharding survives (a KV repeat
+    to H would force GSPMD to reshard/gather the whole cache — §Perf)."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=F32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if kv_valid is not None:
+        s = s + jnp.where(kv_valid, 0.0, NEG_INF).astype(F32)[:, None, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool, window: int = 0, scale: Optional[float] = None,
+              softcap: float = 0.0, q_offset: int = 0,
+              chunk_q: int = 1024, kv_valid: Optional[jax.Array] = None,
+              pad_heads: bool = False, group_kv: bool = False) -> jax.Array:
+    """GQA attention.  q: (B,Sq,Hq,D), k/v: (B,Sk,Hkv,D) -> (B,Sq,Hq,D).
+
+    When Sq > chunk_q, queries are processed in chunks under jax.checkpoint:
+    bounded memory (flash-attention behavior) with recompute-in-backward.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]                      # may differ from d (MLA)
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+
+    # Pallas fast path (TPU): plain causal/bidir GQA, no window/softcap/valid-mask
+    if (_KERNEL_MODE != "xla" and window == 0 and softcap == 0.0 and kv_valid is None
+            and q_offset == 0 and d == dv and sq > 1):
+        from repro.kernels import ops as _ops
+        if _ops.use_pallas(_KERNEL_MODE):
+            return _ops.flash_attention(q, k, v, causal, scale,
+                                        _KERNEL_MODE == "pallas"
+                                        and jax.default_backend() != "tpu")
+
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if group_kv and not causal and window == 0:
+        return _attend_grouped(q, k, v, scale, softcap, kv_valid)
+    if g > 1:  # broadcast KV heads (shardable-head form; see _attend_dense)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    real_h = hq
+    if pad_heads:
+        q, k, v, real_h = _pad_heads_tp(q, k, v)
+        hq = q.shape[2]
+    kpos = jnp.arange(sk, dtype=jnp.int32)
+
+    if _EXACT_COSTING:
+        chunk_q = max(chunk_q, sq)
+    if sq <= chunk_q:
+        qpos = q_offset + jnp.arange(sq, dtype=jnp.int32)
+        o = _attend_dense(q, k, v, qpos, kpos, causal, window, scale, softcap, kv_valid)
+        return o[:, :, :real_h]
+
+    n_chunks = -(-sq // chunk_q)
+    pad = n_chunks * chunk_q - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc_all = q.reshape(b, n_chunks, chunk_q, hq, d).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        ci, qc = inp
+        qpos = q_offset + ci * chunk_q + jnp.arange(chunk_q, dtype=jnp.int32)
+        oc = _attend_dense(qc, k, v, qpos, kpos, causal, window, scale, softcap, kv_valid)
+        return carry, oc
+
+    _, o = jax.lax.scan(body, 0, (jnp.arange(n_chunks), qc_all))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk_q, hq, dv)
+    return o[:, :sq, :real_h]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (params + apply)
+# ---------------------------------------------------------------------------
+def attn_spec(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    s = {
+        "wq": ParamSpec((d, nq, hd), ("embed", "heads", None), init="scaled"),
+        "wk": ParamSpec((d, nkv, hd), ("embed", "kv_heads", None), init="scaled"),
+        "wv": ParamSpec((d, nkv, hd), ("embed", "kv_heads", None), init="scaled"),
+        "wo": ParamSpec((nq, hd, d), ("heads", None, "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((nq, hd), ("heads", None), init="zeros")
+        s["bk"] = ParamSpec((nkv, hd), ("kv_heads", None), init="zeros")
+        s["bv"] = ParamSpec((nkv, hd), ("kv_heads", None), init="zeros")
+    return s
+
+
+def _qkv(x, p, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    return q, k, v
+
+
+def _rope_for(cfg: ModelConfig, positions, hd: int, batch: int, seq: int):
+    """cos/sin for this arch's rope kind; positions: (S,) or (3,B,S) or None."""
+    if cfg.rope_kind == "none" or cfg.rope_kind == "sinusoid":
+        return None
+    if cfg.rope_kind == "mrope":
+        if positions is None or positions.ndim == 1:
+            positions = vlm_positions(batch, seq, cfg.n_vision_tokens)
+            if positions.shape[2] != seq:  # offset decode handled by caller
+                pass
+        return mrope_cos_sin(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    if positions is None:
+        positions = jnp.arange(seq, dtype=jnp.int32)
+    return rope_cos_sin(positions, hd, cfg.rope_theta)
+
+
+def attn_block(x, p, cfg: ModelConfig, *, causal: bool = False, window: int = 0,
+               positions=None, cross_kv=None):
+    """Full-sequence attention block (train/prefill). Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"][None, None]
+        k, v = cross_kv
+        o = attention(q, k, v, causal=False, softcap=cfg.attn_logit_softcap)
+        return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+    q, k, v = _qkv(x, p, cfg)
+    cs = _rope_for(cfg, positions, hd, b, s)
+    if cs is not None:
+        q = apply_rope(q, *cs)
+        k = apply_rope(k, *cs)
+    o = attention(q, k, v, causal=causal, window=window,
+                  softcap=cfg.attn_logit_softcap,
+                  pad_heads=cfg.pad_heads_to_tp)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+
+
+def _norm_index(index, b: int) -> jax.Array:
+    """Normalize decode position index to (B,) int32 (scalar broadcasts)."""
+    idx = jnp.asarray(index, jnp.int32)
+    return jnp.broadcast_to(idx, (b,)) if idx.ndim == 0 else idx
+
+
+def attn_decode(x, p, cfg: ModelConfig, k_cache, v_cache, index, *,
+                window: int = 0, positions=None, cross: bool = False):
+    """Single-token decode. x: (B,1,d). k/v_cache: (B,S,hkv,hd) (rope pre-applied
+    at write time). index: scalar or (B,) per-slot position.
+    Returns (out, k_cache, v_cache)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    s_max = k_cache.shape[1]
+    if cross:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"][None, None]
+        valid = jnp.ones((b, s_max), bool)
+        o = attention(q, k_cache, v_cache, causal=False, kv_valid=valid,
+                      softcap=cfg.attn_logit_softcap)
+        return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), k_cache, v_cache
+    idx = _norm_index(index, b)                                  # (B,)
+    q, k, v = _qkv(x, p, cfg)
+    if cfg.rope_kind in ("rope", "mrope"):
+        if cfg.rope_kind == "mrope":
+            pos3 = jnp.broadcast_to(idx[None, :, None], (3, b, 1)).astype(jnp.int32)
+            cs = mrope_cos_sin(pos3, hd, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            cs = rope_cos_sin(idx[:, None], hd, cfg.rope_theta)  # (B,1,hd/2)
+        q = apply_rope(q, *cs)
+        k = apply_rope(k, *cs)
+    slot = idx % s_max if window > 0 else idx
+    if cfg.decode_cache_seq_shard or cfg.decode_2d_tp:
+        # masked elementwise write: a scatter into the sharded seq dim would
+        # make GSPMD all-gather the whole cache per layer (§Perf cell 2)
+        mask = (jnp.arange(s_max, dtype=jnp.int32)[None, :] == slot[:, None]
+                )[..., None, None]                       # (B,S,1,1)
+        k_cache = jnp.where(mask, k[:, 0:1], k_cache)
+        v_cache = jnp.where(mask, v[:, 0:1], v_cache)
+    else:
+        rows = jnp.arange(b)
+        k_cache = k_cache.at[rows, slot].set(k[:, 0])
+        v_cache = v_cache.at[rows, slot].set(v[:, 0])
+    kpos_slots = jnp.arange(s_max, dtype=jnp.int32)[None, :]     # (1,S)
+    idx_c = idx[:, None]
+    if window > 0:
+        # ring buffer: slot j holds absolute position idx - ((idx - j) mod s_max)
+        abs_pos = idx_c - ((idx_c - kpos_slots) % s_max)
+        valid = (abs_pos >= 0) & (abs_pos <= idx_c) & (idx_c - abs_pos < window)
+    else:
+        valid = kpos_slots <= idx_c
+    o = attention(q, k_cache, v_cache, causal=False, kv_valid=valid,
+                  softcap=cfg.attn_logit_softcap,
+                  group_kv=cfg.decode_cache_seq_shard or cfg.decode_2d_tp)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+def mla_spec(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    return {
+        "wq": ParamSpec((d, h, m.qk_nope_head_dim + m.qk_rope_head_dim),
+                        ("embed", "heads", None), init="scaled"),
+        "w_dkv": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           ("embed", None), init="scaled"),
+        "kv_norm": norm_spec(m.kv_lora_rank),
+        "w_uk": ParamSpec((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                          (None, "heads", None), init="scaled"),
+        "w_uv": ParamSpec((m.kv_lora_rank, h, m.v_head_dim),
+                          (None, "heads", None), init="scaled"),
+        "wo": ParamSpec((h, m.v_head_dim, d), ("heads", None, "embed"), init="scaled"),
+    }
+
+
+def mla_block(x, p, cfg: ModelConfig, *, causal: bool = True, positions=None):
+    """Train/prefill MLA: expand latent to per-head K/V.  Returns (out, cache_kv)
+    where cache_kv = (c_kv, k_rope) for the decode path."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    cs = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, *cs)
+    k_rope = apply_rope(k_rope[:, :, None, :], *cs)          # (B,S,1,rope)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope_head_dim,))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    o = attention(qf, k, v, causal=causal, scale=scale)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(x, p, cfg: ModelConfig, c_cache, kr_cache, index):
+    """Absorbed-projection MLA decode: attention runs in the latent space
+    (per-head K/V are never materialized over the 32k cache).
+    c_cache: (B,S,lora), kr_cache: (B,S,rope)."""
+    m = cfg.mla
+    b = x.shape[0]
+    s_max = c_cache.shape[1]
+    idx = _norm_index(index, b)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])                  # (B,1,H,nope+rope)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_new, kr_new = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_new = rms_norm(c_new, p["kv_norm"], cfg.norm_eps)
+    cs = rope_cos_sin(idx[:, None], m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, *cs)
+    kr_new = apply_rope(kr_new[:, :, None, :], *cs)[:, :, 0, :]
+    rows = jnp.arange(b)
+    c_cache = c_cache.at[rows, idx].set(c_new[:, 0])
+    kr_cache = kr_cache.at[rows, idx].set(kr_new[:, 0])
+    # absorb W_uk into q: q_lat (B,1,H,lora)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, c_cache, preferred_element_type=F32)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr_cache, preferred_element_type=F32)
+    scores = (s_lat + s_rope) * scale
+    valid = jnp.arange(s_max, dtype=jnp.int32)[None, :] <= idx[:, None]
+    scores = scores + jnp.where(valid, 0.0, NEG_INF).astype(F32)[:, None, None, :]
+    prob = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", prob, c_cache)        # (B,1,H,lora)
+    o = jnp.einsum("bshr,rhk->bshk", ctx_lat, p["w_uv"])         # (B,1,H,v)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, c_cache, kr_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "wi_gate": ParamSpec((d, f), ("embed", "mlp"), init="scaled"),
+            "wi_up": ParamSpec((d, f), ("embed", "mlp"), init="scaled"),
+            "wo": ParamSpec((f, d), ("mlp", "embed"), init="scaled"),
+        }
+    return {  # gelu (whisper)
+        "wi": ParamSpec((d, f), ("embed", "mlp"), init="scaled"),
+        "bi": ParamSpec((f,), ("mlp",), init="zeros"),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), init="scaled"),
+        "bo": ParamSpec((d,), (None,), init="zeros"),
+    }
+
+
+def mlp_block(x, p, cfg: ModelConfig):
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+        h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+        return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"]) + p["bi"]
+    h = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"]) + p["bo"]

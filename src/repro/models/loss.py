@@ -1,0 +1,88 @@
+"""Cross-entropy losses.
+
+`blocked_cross_entropy` is the memory-term optimization (EXPERIMENTS.md §Perf):
+for 150k-vocab models the (B, S, V) logits tensor is the single largest
+activation in training (e.g. qwen2.5 train_4k: 1M tokens x 152k vocab x 2B
+= 319 GB global).  We instead scan over vocab blocks maintaining a running
+(max, sumexp, label_logit); the full logits never exist.  jax.checkpoint on
+the block body keeps backward memory equally bounded (recompute per block).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """logits (..., V) any float dtype; labels (...) int32.
+    Returns (mean_nll fp32, accuracy fp32)."""
+    logits = logits.astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    acc = (jnp.argmax(logits, axis=-1) == labels).astype(F32)
+    if mask is None:
+        return nll.mean(), acc.mean()
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom, (acc * mask).sum() / denom
+
+
+def blocked_cross_entropy(x: jax.Array, emb: jax.Array, labels: jax.Array,
+                          block: int = 8192,
+                          mask: jax.Array | None = None,
+                          transpose_emb: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """CE of logits = x @ emb^T without materializing them.
+
+    x: (T, d) final hidden states; emb: (V, d) (or (d, V) with transpose_emb);
+    labels: (T,).  Returns (mean_nll, max-logit-match accuracy proxy).
+    """
+    if transpose_emb:
+        emb = emb.T                                    # (V, d) view
+    v, d = emb.shape
+    t = x.shape[0]
+    n_blocks = -(-v // block)
+    pad = n_blocks * block - v
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0)))
+    embb = emb.reshape(n_blocks, block, d)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m, s, ll, amax_val, amax_idx = carry
+        bi, e_blk = inp
+        logits = jnp.einsum("td,kd->tk", x, e_blk, preferred_element_type=F32)
+        base = bi * block
+        col = jnp.arange(block, dtype=jnp.int32)[None, :] + base
+        valid = col < v
+        logits = jnp.where(valid, logits, -jnp.inf)
+        blk_max = jnp.max(logits, axis=-1)
+        new_m = jnp.maximum(m, blk_max)
+        s = s * jnp.exp(m - new_m) + jnp.sum(jnp.exp(logits - new_m[:, None]), axis=-1)
+        # label logit if the label falls in this block
+        in_blk = (labels >= base) & (labels < base + block)
+        idx = jnp.clip(labels - base, 0, block - 1)
+        cand = jnp.take_along_axis(logits, idx[:, None], axis=-1)[:, 0]
+        ll = jnp.where(in_blk, cand, ll)
+        # running argmax for accuracy
+        blk_arg = jnp.argmax(logits, axis=-1) + base
+        better = blk_max > amax_val
+        amax_val = jnp.where(better, blk_max, amax_val)
+        amax_idx = jnp.where(better, blk_arg, amax_idx)
+        return (new_m, s, ll, amax_val, amax_idx), None
+
+    init = (jnp.full((t,), -jnp.inf, F32), jnp.zeros((t,), F32),
+            jnp.full((t,), -jnp.inf, F32), jnp.full((t,), -jnp.inf, F32),
+            jnp.zeros((t,), jnp.int32))
+    (m, s, ll, _, amax_idx), _ = jax.lax.scan(
+        body, init, (jnp.arange(n_blocks), embb))
+    nll = m + jnp.log(s) - ll
+    acc = (amax_idx == labels).astype(F32)
+    if mask is None:
+        return nll.mean(), acc.mean()
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom, (acc * mask).sum() / denom

@@ -1,0 +1,173 @@
+"""Unified model API over all 10 assigned architectures.
+
+    model = build_model(cfg)
+    spec  = model.spec()                    # ParamSpec tree (single source of truth)
+    params = model.init(key)                # materialized (smoke / real runs)
+    aspec  = model.abstract_params()        # ShapeDtypeStruct tree (dry-run)
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens, index)
+    cspec  = model.cache_abstract(batch, s_max)
+
+Batch dict keys by family:
+    LM/MoE/SSM/hybrid: tokens (B,S) int32
+    vlm:               tokens (B,S) + vision_embeds (B, n_vis, d)
+    audio (whisper):   frames (B,S,d) + tokens (B, dec_len)
+All train batches also carry labels (same shape as tokens).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import param as P
+from repro.models.loss import blocked_cross_entropy, cross_entropy
+
+F32 = jnp.float32
+
+
+def _shift_labels(tokens):
+    """next-token labels (last position predicts a pad; masked out)."""
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = jnp.concatenate([jnp.ones_like(tokens[:, 1:], F32),
+                            jnp.zeros_like(tokens[:, :1], F32)], axis=1)
+    return labels, mask
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- params ------------------------------------------------------------
+    def spec(self) -> P.SpecTree:
+        if self.cfg.encdec:
+            return ED.encdec_spec(self.cfg)
+        return T.lm_spec(self.cfg)
+
+    def init(self, key: jax.Array):
+        return P.init_params(self.spec(), key)
+
+    def abstract_params(self):
+        return P.abstract_params(self.spec())
+
+    def logical_axes(self):
+        return P.logical_axes(self.spec())
+
+    def param_count(self) -> int:
+        return P.param_count(self.spec())
+
+    # -- embedding / head ----------------------------------------------------
+    def _embed(self, params, batch) -> Tuple[jax.Array, Optional[jax.Array]]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        positions = None
+        if cfg.family == "vlm":
+            b, s = tokens.shape
+            ve = batch["vision_embeds"].astype(x.dtype)      # (B, n_vis, d)
+            n_vis = ve.shape[1]
+            pad = jnp.zeros((b, s - n_vis, ve.shape[-1]), x.dtype)
+            ve_full = jnp.concatenate([ve, pad], axis=1)
+            is_vis = (jnp.arange(s) < n_vis)[None, :, None]
+            x = jnp.where(is_vis, ve_full, x)
+            positions = L.vlm_positions(b, s, n_vis)
+        return L.shard_batch(x), positions
+
+    def _head(self, params, x) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+    # -- training loss -------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        if cfg.encdec:
+            enc_out = ED.encode(batch["frames"], params, cfg)
+            logits = ED.decode_train(batch["tokens"], enc_out, params, cfg)
+            labels, mask = _shift_labels(batch["tokens"])
+            nll, acc = cross_entropy(logits, labels, mask)
+            return nll, {"nll": nll, "acc": acc, "aux": jnp.zeros((), F32)}
+
+        x, positions = self._embed(params, batch)
+        x, aux, _ = T.apply_segments(x, params["segments"], cfg,
+                                     causal=True, positions=positions)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        labels, mask = _shift_labels(batch["tokens"])
+        if cfg.blocked_xent:
+            b, s, d = x.shape
+            emb = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+            vb = cfg.vocab_size if L.exact_costing() else cfg.vocab_block
+            nll, acc = blocked_cross_entropy(
+                x.reshape(b * s, d), emb, labels.reshape(-1),
+                block=vb, mask=mask.reshape(-1),
+                transpose_emb=not cfg.tie_embeddings)
+        else:
+            logits = self._head(params, x)
+            nll, acc = cross_entropy(logits, labels, mask)
+        loss = nll + aux
+        return loss, {"nll": nll, "acc": acc, "aux": aux}
+
+    # -- inference: prefill ----------------------------------------------------
+    def prefill(self, params, batch) -> Tuple[jax.Array, Any]:
+        """Full-prompt pass. Returns (last-position logits (B,V), cache)."""
+        cfg = self.cfg
+        if cfg.encdec:
+            enc_out = ED.encode(batch["frames"], params, cfg)
+            ck, cv = ED.build_cross_cache(enc_out, params)
+            dec_tokens = batch["tokens"]
+            s_max = batch.get("s_max", dec_tokens.shape[1])
+            logits = ED.decode_train(dec_tokens, enc_out, params, cfg)
+            # build self-attn cache for subsequent decode (filled up to dec len)
+            b = dec_tokens.shape[0]
+            cspec = ED.encdec_cache_spec(cfg, b, s_max)
+            cache = P.init_params(cspec, jax.random.PRNGKey(0))
+            cache = dict(cache)
+            cache["cross_k"], cache["cross_v"] = ck, cv
+            return logits[:, -1], cache
+        x, positions = self._embed(params, batch)
+        x, _, caches = T.apply_segments(x, params["segments"], cfg, causal=True,
+                                        positions=positions, collect_cache=True)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x[:, -1:])[:, 0]
+        return logits, caches
+
+    # -- inference: single-token decode ----------------------------------------
+    def decode_step(self, params, cache, tokens, index) -> Tuple[jax.Array, Any]:
+        """tokens: (B,1) int32; index: scalar int32 (current position).
+        Returns (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        if cfg.encdec:
+            return ED.decode_step(tokens, cache, params, cfg, index)
+        x = params["embed"][tokens]
+        if cfg.family == "vlm":
+            pass  # decode tokens are text; M-RoPE handled inside attn_decode
+        x, cache = T.apply_segments_decode(x, params["segments"], cache, cfg, index)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._head(params, x), cache
+
+    # -- caches -----------------------------------------------------------------
+    def cache_spec(self, batch: int, s_max: int):
+        if self.cfg.encdec:
+            return ED.encdec_cache_spec(self.cfg, batch, s_max)
+        return T.cache_spec(self.cfg, batch, s_max)
+
+    def cache_abstract(self, batch: int, s_max: int):
+        return P.abstract_params(self.cache_spec(batch, s_max))
+
+    def cache_zeros(self, batch: int, s_max: int):
+        return P.init_params(self.cache_spec(batch, s_max), jax.random.PRNGKey(0))
+
+    def cache_logical_axes(self, batch: int, s_max: int):
+        return P.logical_axes(self.cache_spec(batch, s_max))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

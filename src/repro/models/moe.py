@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN (DeepSeek/Moonlight family: shared + routed top-k).
+
+Dispatch is capacity-based scatter into per-expert buffers, computed
+**per batch row**:
+
+  * routing, intra-expert positions (cumsum) and scatter/gather are all
+    independent per batch element, so under GSPMD with batch sharded over
+    the dp axes every dispatch op stays device-local (no cross-shard
+    cumsum/scatter traffic);
+  * the expert dim of the (B, E, C, d) buffers carries the "experts"
+    logical axis => expert parallelism over the "model" mesh axis;
+  * per-row capacity C = ceil(cf * k * S / E); tokens over capacity are
+    dropped (GShard semantics) — the residual connection keeps them intact;
+  * fully differentiable (scatter-add fwd, gather bwd and vice versa).
+
+A Switch-style auxiliary load-balancing loss is returned for training.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models.layers import F32
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_ff_expert
+    # §Perf knob: with moe_expert_fsdp=False the expert weights are sharded
+    # over experts (EP) ONLY — no FSDP dim, so no per-layer all-gather of the
+    # full expert bank (the dominant collective in the MoE train baseline).
+    emb = "embed" if cfg.moe_expert_fsdp else None
+    s = {
+        "router": ParamSpec((d, m.num_experts), ("embed", "experts"), init="scaled",
+                            dtype=jnp.float32),
+        "w_gate": ParamSpec((m.num_experts, d, fe), ("experts", emb, "expert_mlp"),
+                            init="scaled"),
+        "w_up": ParamSpec((m.num_experts, d, fe), ("experts", emb, "expert_mlp"),
+                          init="scaled"),
+        "w_down": ParamSpec((m.num_experts, fe, d), ("experts", "expert_mlp", emb),
+                            init="scaled"),
+    }
+    if m.num_shared_experts:
+        fs = m.num_shared_experts * fe
+        s["shared"] = {
+            "wi_gate": ParamSpec((d, fs), ("embed", "mlp"), init="scaled"),
+            "wi_up": ParamSpec((d, fs), ("embed", "mlp"), init="scaled"),
+            "wo": ParamSpec((fs, d), ("mlp", "embed"), init="scaled"),
+        }
+    return s
+
+
+def moe_capacity(cfg: ModelConfig, seq: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * m.top_k * seq / m.num_experts)
+    return max(c, m.top_k)
+
+
+def _dispatch_row(flat_e, slot, src, num_experts, cap):
+    """One batch row: scatter (S*k, d) token copies into (E, C+1, d)."""
+    buf = jnp.zeros((num_experts, cap + 1, src.shape[-1]), src.dtype)
+    return buf.at[flat_e, slot].add(src)
+
+
+def _gather_row(out_buf, flat_e, slot):
+    return out_buf[flat_e, slot]
+
+
+def moe_block(x: jax.Array, p: dict, cfg: ModelConfig,
+              capacity: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    k = m.top_k
+    c = capacity or moe_capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(F32), p["router"].astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B,S,E) fp32
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e f_e * P_e  (global means)
+    me = probs.mean((0, 1))
+    ce = jax.nn.one_hot(expert_idx[..., 0], m.num_experts, dtype=F32).mean((0, 1))
+    aux = m.num_experts * jnp.sum(me * ce) * m.aux_loss_weight
+
+    # per-row intra-expert positions
+    flat_e = expert_idx.reshape(b, s * k)                        # (B, S*k)
+    eo = jax.nn.one_hot(flat_e, m.num_experts, dtype=jnp.int32)  # (B, S*k, E)
+    pos = jnp.cumsum(eo, axis=1) - 1
+    pos_in_e = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = pos_in_e < c
+    slot = jnp.where(keep, pos_in_e, c)                          # overflow slot = c
+
+    src = jnp.repeat(x.reshape(b, s, 1, d), k, axis=2).reshape(b, s * k, d)
+    buf = jax.vmap(_dispatch_row, in_axes=(0, 0, 0, None, None))(
+        flat_e, slot, src, m.num_experts, c)                     # (B, E, C+1, d)
+
+    # expert SwiGLU: (B,E,C,d) x (E,d,f)
+    bufc = buf[:, :, :c]
+    g = jnp.einsum("becd,edf->becf", bufc, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", bufc, p["w_up"])
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    out_buf = jnp.pad(out_buf, ((0, 0), (0, 0), (0, 1), (0, 0)))
+
+    gathered = jax.vmap(_gather_row)(out_buf, flat_e, slot)      # (B, S*k, d)
+    w = (gate_vals.reshape(b, s * k) * keep.astype(F32)).astype(x.dtype)
+    y = (gathered * w[..., None]).reshape(b, s, k, d).sum(axis=2)
+
+    if m.num_shared_experts:
+        sp = p["shared"]
+        g = jnp.einsum("bsd,df->bsf", x, sp["wi_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, sp["wi_up"])
+        y = y + jnp.einsum("bsf,fd->bsd",
+                           jax.nn.silu(g.astype(F32)).astype(x.dtype) * u, sp["wo"])
+
+    return y, aux

@@ -1,0 +1,281 @@
+"""State-space / linear-recurrence blocks: Mamba-1 selective SSM and
+Griffin RG-LRU, sharing one chunked diagonal-recurrence scan.
+
+Memory discipline: a naive Mamba scan materializes (B, S, d_inner, N)
+decay/input tensors (17 GB at our train_4k shapes).  We instead scan over
+time *chunks*; the chunk body is jax.checkpoint'ed so only the inter-chunk
+carried state (B, d_inner, N) is stored per chunk — the per-step tensors
+exist transiently inside one chunk (fwd and recomputed bwd).  This is the
+same tiling the Pallas ssm_scan kernel uses on TPU (kernels/ssm_scan.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models.layers import F32
+
+DEFAULT_CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# chunked diagonal linear recurrence: h_t = a_t * h_{t-1} + b_t
+# a, b: (B, S, ...state dims...) ; returns h for every t (same shape) + final h
+# ---------------------------------------------------------------------------
+def assoc_diag_scan(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Associative-scan formulation (exact-costing mode: statically unrolled
+    log-depth combine graph, so XLA cost analysis counts it fully)."""
+    def comb(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+    a_, hs = jax.lax.associative_scan(comb, (a.astype(F32), b.astype(F32)), axis=1)
+    del a_
+    return hs, hs[:, -1]
+
+
+def chunked_diag_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None,
+                      chunk: int = DEFAULT_CHUNK) -> Tuple[jax.Array, jax.Array]:
+    from repro.models import layers as _L
+    if _L.exact_costing() and h0 is None:
+        return assoc_diag_scan(a, b)
+    B, S = a.shape[0], a.shape[1]
+    state_shape = a.shape[2:]
+    if h0 is None:
+        h0 = jnp.zeros((B,) + state_shape, F32)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * len(state_shape), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad)) + ((0, 0),) * len(state_shape))
+    ac = jnp.moveaxis(a.reshape((B, n_chunks, chunk) + state_shape), 1, 0)
+    bc = jnp.moveaxis(b.reshape((B, n_chunks, chunk) + state_shape), 1, 0)
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        a_c, b_c = inp                                   # (B, chunk, ...)
+
+        def step(hh, xs):
+            at, bt = xs
+            hh = at.astype(F32) * hh + bt.astype(F32)
+            return hh, hh
+
+        h, hs = jax.lax.scan(step, h, (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0)))
+        return h, jnp.moveaxis(hs, 0, 1)                 # back to (B, chunk, ...)
+
+    h_final, hs = jax.lax.scan(chunk_body, h0, (ac, bc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape((B, n_chunks * chunk) + state_shape)
+    return hs[:, :S], h_final
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (k small), + single-step update for decode
+# ---------------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """x: (B, S, C), w: (C, K) depthwise, causal."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum_j x[t-K+1+j] * w[:, j]
+    out = jnp.zeros_like(x, dtype=F32)
+    for j in range(k):
+        out = out + xp[:, j:j + x.shape[1]].astype(F32) * w[:, j].astype(F32)[None, None]
+    return (out + bias.astype(F32)).astype(x.dtype)
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                bias: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x_t: (B, C); conv_state: (B, K-1, C) past inputs. Returns (y_t, new_state)."""
+    k = w.shape[1]
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,ck->bc", window.astype(F32), w.astype(F32)) + bias.astype(F32)
+    return y.astype(x_t.dtype), window[:, -(k - 1):] if k > 1 else conv_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block
+# ---------------------------------------------------------------------------
+def mamba_spec(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dtr = cfg.dt_rank
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner"), init="scaled"),
+        "conv_w": ParamSpec((di, s.d_conv), ("ssm_inner", None), init="scaled"),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "x_proj": ParamSpec((di, dtr + 2 * s.d_state), ("ssm_inner", None), init="scaled"),
+        "dt_proj": ParamSpec((dtr, di), (None, "ssm_inner"), init="scaled"),
+        "dt_bias": ParamSpec((di,), ("ssm_inner",), init="dt_bias", dtype=jnp.float32),
+        "A_log": ParamSpec((di, s.d_state), ("ssm_inner", None), init="a_log", dtype=jnp.float32),
+        "D": ParamSpec((di,), ("ssm_inner",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), init="scaled"),
+    }
+
+
+def _mamba_abc(xc, p, cfg):
+    """Shared projections: xc (B,T,di) -> dt (B,T,di) fp32, Bm, Cm (B,T,N)."""
+    s = cfg.ssm
+    dtr = cfg.dt_rank
+    xdbc = jnp.einsum("btd,dk->btk", xc, p["x_proj"])
+    dt_r, Bm, Cm = jnp.split(xdbc, [dtr, dtr + s.d_state], axis=-1)
+    dt = jnp.einsum("btr,rd->btd", dt_r, p["dt_proj"]).astype(F32) + p["dt_bias"]
+    dt = jax.nn.softplus(dt)
+    return dt, Bm, Cm
+
+
+def _mamba_chunk_scan(dt, Bm, Cm, xc, A, chunk: int):
+    """Fused selective scan. dt (B,S,di) fp32; Bm/Cm (B,S,N); xc (B,S,di).
+    Decay/input tensors (B,chunk,di,N) only ever exist for ONE chunk
+    (checkpointed body) — never (B,S,di,N).  Returns (y (B,S,di) fp32, h_final)."""
+    B, S, di = dt.shape
+    N = Bm.shape[-1]
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+
+    def prep(t, fill=0.0):
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2),
+                        constant_values=fill)
+        t = t.reshape((B, n_chunks, chunk) + t.shape[2:])
+        return jnp.moveaxis(t, 1, 0)                     # (n_chunks, B, chunk, ...)
+
+    from repro.models import layers as _L
+    if _L.exact_costing():
+        # exact-costing mode: materialized associative form (count-correct)
+        a = jnp.exp(dt[..., None] * A[None, None])       # (B,S,di,N)
+        bmat = (dt * xc.astype(F32))[..., None] * Bm.astype(F32)[:, :, None, :]
+        hs, h_final = assoc_diag_scan(a, bmat)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cm.astype(F32))
+        return y, h_final
+
+    xs = (prep(dt), prep(Bm), prep(Cm), prep(xc))
+
+    @jax.checkpoint
+    def body(h, inp):
+        dt_c, B_c, C_c, x_c = inp                        # (B, chunk, ...)
+        a = jnp.exp(dt_c[..., None] * A[None, None])     # (B, chunk, di, N)
+        b = (dt_c * x_c.astype(F32))[..., None] * B_c.astype(F32)[:, :, None, :]
+
+        def step(hh, s_in):
+            at, bt, ct = s_in                            # (B,di,N),(B,di,N),(B,N)
+            hh = at * hh + bt
+            yt = jnp.einsum("bdn,bn->bd", hh, ct)
+            return hh, yt
+
+        h, y_c = jax.lax.scan(
+            step, h, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0),
+                      jnp.moveaxis(C_c.astype(F32), 1, 0)))
+        return h, jnp.moveaxis(y_c, 0, 1)                # (B, chunk, di)
+
+    h0 = jnp.zeros((B, di, N), F32)
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    ys = jnp.moveaxis(ys, 0, 1).reshape(B, n_chunks * chunk, di)
+    return ys[:, :S], h_final
+
+
+def mamba_block(x: jax.Array, p: dict, cfg: ModelConfig,
+                chunk: int = DEFAULT_CHUNK, return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d) [, (conv_state, ssm_state)]."""
+    s = cfg.ssm
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    xc_pre, z = jnp.split(xz, 2, axis=-1)                # (B,S,di) each
+    xc = causal_conv1d(xc_pre, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(F32)).astype(x.dtype)
+    dt, Bm, Cm = _mamba_abc(xc, p, cfg)
+    A = -jnp.exp(p["A_log"])                             # (di, N) fp32
+    y, h_final = _mamba_chunk_scan(dt, Bm, Cm, xc, A, chunk)  # (B,S,di) fp32
+    y = y + p["D"][None, None] * xc.astype(F32)
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    if return_state:
+        conv_state = xc_pre[:, -(s.d_conv - 1):]         # raw pre-conv tail
+        return out, (conv_state, h_final)
+    return out
+
+
+def mamba_decode(x_t: jax.Array, p: dict, cfg: ModelConfig,
+                 conv_state: jax.Array, ssm_state: jax.Array):
+    """Single token. x_t: (B,1,d); conv_state (B,K-1,di); ssm_state (B,di,N) fp32.
+    Returns (y (B,1,d), conv_state, ssm_state)."""
+    xz = jnp.einsum("bsd,dk->bsk", x_t, p["in_proj"])[:, 0]
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = conv1d_step(xc, conv_state, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(F32)).astype(x_t.dtype)
+    dt, Bm, Cm = _mamba_abc(xc[:, None], p, cfg)
+    dt, Bm, Cm = dt[:, 0], Bm[:, 0], Cm[:, 0]            # (B,di) fp32, (B,N), (B,N)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A[None])                 # (B,di,N)
+    bmat = (dt * xc.astype(F32))[..., None] * Bm.astype(F32)[:, None, :]
+    ssm_state = a * ssm_state + bmat
+    y = jnp.einsum("bdn,bn->bd", ssm_state, Cm.astype(F32))
+    y = y + p["D"][None] * xc.astype(F32)
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x_t.dtype)
+    return jnp.einsum("bk,kd->bd", y, p["out_proj"])[:, None], conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Griffin RG-LRU block (recurrentgemma)
+# ---------------------------------------------------------------------------
+def rglru_spec(cfg: ModelConfig) -> dict:
+    g = cfg.rglru
+    d = cfg.d_model
+    w = g.lru_width or d
+    return {
+        "in_x": ParamSpec((d, w), ("embed", "rnn"), init="scaled"),
+        "in_gate": ParamSpec((d, w), ("embed", "rnn"), init="scaled"),
+        "conv_w": ParamSpec((w, g.d_conv), ("rnn", None), init="scaled"),
+        "conv_b": ParamSpec((w,), ("rnn",), init="zeros"),
+        "gate_i_w": ParamSpec((w,), ("rnn",), init="zeros", dtype=jnp.float32),
+        "gate_i_b": ParamSpec((w,), ("rnn",), init="zeros", dtype=jnp.float32),
+        "gate_r_w": ParamSpec((w,), ("rnn",), init="zeros", dtype=jnp.float32),
+        "gate_r_b": ParamSpec((w,), ("rnn",), init="zeros", dtype=jnp.float32),
+        "a_param": ParamSpec((w,), ("rnn",), init="lru_a", dtype=jnp.float32),
+        "out": ParamSpec((w, d), ("rnn", "embed"), init="scaled"),
+    }
+
+
+_LRU_C = 8.0
+
+
+def _rglru_gates(xc, p):
+    """xc fp32 (..., w) -> (log_a, gated_in) fp32 (per-channel diagonal gates;
+    DESIGN.md notes this simplification of Griffin's block-diagonal gates)."""
+    i_gate = jax.nn.sigmoid(xc * p["gate_i_w"] + p["gate_i_b"])
+    r_gate = jax.nn.sigmoid(xc * p["gate_r_w"] + p["gate_r_b"])
+    log_a = -_LRU_C * r_gate * jax.nn.softplus(p["a_param"])
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) multiplier on the gated input (Griffin eq. 4)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i_gate * xc
+
+
+def rglru_block(x: jax.Array, p: dict, cfg: ModelConfig,
+                chunk: int = DEFAULT_CHUNK, return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d) [, (conv_state, h_final)]. Griffin recurrent block:
+    two branches (gate via GELU; x via conv1d + RG-LRU), merged, projected."""
+    xb_pre = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
+    gb = jnp.einsum("bsd,dw->bsw", x, p["in_gate"])
+    xb = causal_conv1d(xb_pre, p["conv_w"], p["conv_b"])
+    a, b = _rglru_gates(xb.astype(F32), p)
+    hs, h_final = chunked_diag_scan(a, b, chunk=chunk)   # (B,S,w) fp32
+    y = hs * jax.nn.gelu(gb.astype(F32))
+    out = jnp.einsum("bsw,wd->bsd", y.astype(x.dtype), p["out"])
+    if return_state:
+        conv_state = xb_pre[:, -(cfg.rglru.d_conv - 1):]
+        return out, (conv_state, h_final)
+    return out
+
+
+def rglru_decode(x_t: jax.Array, p: dict, cfg: ModelConfig,
+                 conv_state: jax.Array, h: jax.Array):
+    """x_t: (B,1,d); conv_state (B,K-1,w); h (B,w) fp32."""
+    xb = jnp.einsum("bsd,dw->bsw", x_t, p["in_x"])[:, 0]
+    gb = jnp.einsum("bsd,dw->bsw", x_t, p["in_gate"])[:, 0]
+    xb, conv_state = conv1d_step(xb, conv_state, p["conv_w"], p["conv_b"])
+    a, b = _rglru_gates(xb.astype(F32), p)
+    h = a * h + b
+    y = h * jax.nn.gelu(gb.astype(F32))
+    return jnp.einsum("bw,wd->bd", y.astype(x_t.dtype), p["out"])[:, None], conv_state, h

@@ -1,0 +1,320 @@
+"""Decoder-only LM assembly with per-layer block patterns.
+
+A config's layers are grouped into *segments*: maximal runs of a repeating
+(block-pattern x moe-flag) structure.  Each segment's parameters are stacked
+with a leading `repeats` dim and applied with jax.lax.scan (small HLO even
+for 126-layer models, which matters for 512-device AOT compiles).
+
+Examples
+  llama3-405b:         [(126, [(attn, dense)])]
+  deepseek-v2-lite:    [(1, [(mla, dense)]), (26, [(mla, moe)])]
+  recurrentgemma-9b:   [(12, [(rglru,·),(rglru,·),(local,·)]), (1, [(rglru,·),(rglru,·)])]
+  falcon-mamba-7b:     [(64, [(mamba,·)])]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ATTN, MLA, MAMBA, RGLRU, LOCAL_ATTN)
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.param import ParamSpec, SpecTree, is_leaf
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    repeats: int
+    pattern: Tuple[Tuple[str, bool], ...]   # ((kind, is_moe), ...)
+
+
+def layer_plan(cfg: ModelConfig) -> List[Segment]:
+    per_layer = [(k, cfg.layer_is_moe(i)) for i, k in enumerate(cfg.layer_kinds())]
+    plen = len(cfg.block_pattern)
+    segs: List[Segment] = []
+    i = 0
+    n = len(per_layer)
+    while i < n:
+        # a pattern-aligned run starting at i
+        pat = tuple(per_layer[i:i + plen])
+        reps = 1
+        j = i + len(pat)
+        while j + len(pat) <= n and tuple(per_layer[j:j + len(pat)]) == pat:
+            reps += 1
+            j += len(pat)
+        if len(pat) < plen:  # tail shorter than pattern
+            segs.append(Segment(1, pat))
+            i += len(pat)
+            continue
+        segs.append(Segment(reps, pat))
+        i = j
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+def _stack_spec(spec: SpecTree, n: int) -> SpecTree:
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, init=s.init,
+                            scale=s.scale, dtype=s.dtype),
+        spec, is_leaf=is_leaf)
+
+
+def mixer_spec(cfg: ModelConfig, kind: str) -> SpecTree:
+    if kind in (ATTN, LOCAL_ATTN):
+        return L.attn_spec(cfg)
+    if kind == MLA:
+        return L.mla_spec(cfg)
+    if kind == MAMBA:
+        return SSM.mamba_spec(cfg)
+    if kind == RGLRU:
+        return SSM.rglru_spec(cfg)
+    raise ValueError(kind)
+
+
+def block_spec(cfg: ModelConfig, kind: str, is_moe: bool) -> SpecTree:
+    d = cfg.d_model
+    s: SpecTree = {"norm1": L.norm_spec(d), "mixer": mixer_spec(cfg, kind)}
+    if kind != MAMBA:
+        s["norm2"] = L.norm_spec(d)
+        s["ffn"] = MOE.moe_spec(cfg) if is_moe else L.mlp_spec(cfg)
+    return s
+
+
+def segment_spec(cfg: ModelConfig, seg: Segment) -> SpecTree:
+    per_pos = [block_spec(cfg, k, m) for (k, m) in seg.pattern]
+    return {"blocks": [_stack_spec(s, seg.repeats) for s in per_pos]}
+
+
+def lm_spec(cfg: ModelConfig) -> SpecTree:
+    d, v = cfg.d_model, cfg.vocab_size
+    s: SpecTree = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), init="normal"),
+        "segments": [segment_spec(cfg, seg) for seg in layer_plan(cfg)],
+        "final_norm": L.norm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((d, v), ("embed", "vocab"), init="scaled")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Block application (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+def apply_block(x, p, cfg: ModelConfig, kind: str, is_moe: bool, *,
+                causal: bool = True, positions=None, collect_cache: bool = False):
+    """Returns (x, aux_loss, cache_entry_or_None)."""
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    cache = None
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.rglru.local_window if (kind == LOCAL_ATTN and cfg.rglru) else 0
+        o, kv = L.attn_block(h, p["mixer"], cfg, causal=causal, window=window,
+                             positions=positions)
+        if collect_cache:
+            cache = {"k": kv[0], "v": kv[1]}
+    elif kind == MLA:
+        o, ckv = L.mla_block(h, p["mixer"], cfg, causal=causal, positions=positions)
+        if collect_cache:
+            cache = {"c_kv": ckv[0], "k_rope": ckv[1]}
+    elif kind == MAMBA:
+        if collect_cache:
+            o, (conv_s, ssm_s) = SSM.mamba_block(h, p["mixer"], cfg, return_state=True)
+            cache = {"conv": conv_s, "ssm": ssm_s}
+        else:
+            o = SSM.mamba_block(h, p["mixer"], cfg)
+    elif kind == RGLRU:
+        if collect_cache:
+            o, (conv_s, hh) = SSM.rglru_block(h, p["mixer"], cfg, return_state=True)
+            cache = {"conv": conv_s, "h": hh}
+        else:
+            o = SSM.rglru_block(h, p["mixer"], cfg)
+    else:
+        raise ValueError(kind)
+    x = L.shard_batch(x + o)
+    aux = jnp.zeros((), F32)
+    if kind != MAMBA:
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if is_moe:
+            f, aux = MOE.moe_block(h2, p["ffn"], cfg)
+        else:
+            f = L.mlp_block(h2, p["ffn"], cfg)
+        x = L.shard_batch(x + f)
+    return x, aux, cache
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full"
+
+
+def apply_segments(x, params_segments, cfg: ModelConfig, *, causal=True,
+                   positions=None, collect_cache=False):
+    """Run all segments. Returns (x, total_aux, caches or None)."""
+    plan = layer_plan(cfg)
+    total_aux = jnp.zeros((), F32)
+    caches: List[Any] = []
+    for seg, seg_p in zip(plan, params_segments):
+        def body(xc, p_slices, _seg=seg):
+            aux = jnp.zeros((), F32)
+            entries = []
+            for pos_i, (kind, m) in enumerate(_seg.pattern):
+                xc, a, ce = apply_block(xc, p_slices[pos_i], cfg, kind, m,
+                                        causal=causal, positions=positions,
+                                        collect_cache=collect_cache)
+                aux = aux + a
+                entries.append(ce)
+            return xc, (aux, entries)
+
+        body = _remat(body, cfg.remat)
+        if cfg.use_scan:
+            x, (auxs, entries) = jax.lax.scan(
+                lambda c, p: body(c, p["blocks"]), x, seg_p)
+            total_aux = total_aux + auxs.sum()
+            caches.append(entries)          # each entry stacked (repeats, ...)
+        else:
+            seg_entries = None
+            for r in range(seg.repeats):
+                p_slices = jax.tree.map(lambda t: t[r], seg_p["blocks"])
+                x, (a, entries) = body(x, p_slices)
+                total_aux = total_aux + a
+                if seg_entries is None:
+                    seg_entries = [[e] for e in entries]
+                else:
+                    for lst, e in zip(seg_entries, entries):
+                        lst.append(e)
+            stacked = [None if es[0] is None else
+                       jax.tree.map(lambda *ts: jnp.stack(ts), *es)
+                       for es in (seg_entries or [])]
+            caches.append(stacked)
+    return x, total_aux, (caches if collect_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode-step application (single token, cache threading)
+# ---------------------------------------------------------------------------
+def apply_block_decode(x, p, cfg: ModelConfig, kind: str, is_moe: bool,
+                       cache: dict, index):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.rglru.local_window if (kind == LOCAL_ATTN and cfg.rglru) else 0
+        o, kc, vc = L.attn_decode(h, p["mixer"], cfg, cache["k"], cache["v"], index,
+                                  window=window)
+        cache = {"k": kc, "v": vc}
+    elif kind == MLA:
+        o, cc, krc = L.mla_decode(h, p["mixer"], cfg, cache["c_kv"], cache["k_rope"], index)
+        cache = {"c_kv": cc, "k_rope": krc}
+    elif kind == MAMBA:
+        o, conv_s, ssm_s = SSM.mamba_decode(h, p["mixer"], cfg,
+                                            cache["conv"], cache["ssm"])
+        cache = {"conv": conv_s, "ssm": ssm_s}
+    elif kind == RGLRU:
+        o, conv_s, hh = SSM.rglru_decode(h, p["mixer"], cfg, cache["conv"], cache["h"])
+        cache = {"conv": conv_s, "h": hh}
+    else:
+        raise ValueError(kind)
+    x = L.shard_batch(x + o)
+    if kind != MAMBA:
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if is_moe:
+            f, _ = MOE.moe_block(h2, p["ffn"], cfg)
+        else:
+            f = L.mlp_block(h2, p["ffn"], cfg)
+        x = L.shard_batch(x + f)
+    return x, cache
+
+
+def apply_segments_decode(x, params_segments, caches, cfg: ModelConfig, index):
+    plan = layer_plan(cfg)
+    new_caches = []
+    for seg, seg_p, seg_c in zip(plan, params_segments, caches):
+        def body(xc, slices, _seg=seg):
+            p_slices, c_slices = slices
+            new_entries = []
+            for pos_i, (kind, m) in enumerate(_seg.pattern):
+                xc, nc = apply_block_decode(xc, p_slices[pos_i], cfg, kind, m,
+                                            c_slices[pos_i], index)
+                new_entries.append(nc)
+            return xc, new_entries
+
+        if cfg.use_scan:
+            x, new_seg_c = jax.lax.scan(
+                lambda c, xs: body(c, (xs[0]["blocks"], xs[1])), x, (seg_p, seg_c))
+        else:
+            outs = []
+            for r in range(seg.repeats):
+                p_slices = jax.tree.map(lambda t: t[r], seg_p["blocks"])
+                c_slices = jax.tree.map(lambda t: t[r], seg_c)
+                x, nc = body(x, (p_slices, c_slices))
+                outs.append(nc)
+            new_seg_c = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+        new_caches.append(new_seg_c)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (ShapeDtypeStruct trees for the dry-run; zeros for real use)
+# ---------------------------------------------------------------------------
+def block_cache_spec(cfg: ModelConfig, kind: str, batch: int, s_max: int) -> SpecTree:
+    hd = cfg.resolved_head_dim
+    dt = jnp.bfloat16
+    # §Perf knob: shard the decode KV cache's sequence dim over "model"
+    # (sequence-parallel decode attention; GSPMD inserts the tiny distributed
+    # softmax collectives).  Fixes cache replication when kv_heads doesn't
+    # divide the model axis (e.g. 48GB/chip -> 3GB/chip for qwen2.5 decode).
+    seq_ax = "kv_seq" if cfg.decode_cache_seq_shard else None
+    if kind == ATTN:
+        shp = (batch, s_max, cfg.num_kv_heads, hd)
+        ax = ("batch", seq_ax, "kv_heads" if not cfg.decode_cache_seq_shard
+              else None, None)
+        return {"k": ParamSpec(shp, ax, init="zeros", dtype=dt),
+                "v": ParamSpec(shp, ax, init="zeros", dtype=dt)}
+    if kind == LOCAL_ATTN:
+        w = min(cfg.rglru.local_window, s_max)
+        shp = (batch, w, cfg.num_kv_heads, hd)
+        ax = ("batch", None, "kv_heads", None)
+        return {"k": ParamSpec(shp, ax, init="zeros", dtype=dt),
+                "v": ParamSpec(shp, ax, init="zeros", dtype=dt)}
+    if kind == MLA:
+        m = cfg.mla
+        return {"c_kv": ParamSpec((batch, s_max, m.kv_lora_rank),
+                                  ("batch", None, None), init="zeros", dtype=dt),
+                "k_rope": ParamSpec((batch, s_max, m.qk_rope_head_dim),
+                                    ("batch", None, None), init="zeros", dtype=dt)}
+    if kind == MAMBA:
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        return {"conv": ParamSpec((batch, s.d_conv - 1, di),
+                                  ("batch", None, "ssm_inner"), init="zeros", dtype=dt),
+                "ssm": ParamSpec((batch, di, s.d_state),
+                                 ("batch", "ssm_inner", None), init="zeros",
+                                 dtype=jnp.float32)}
+    if kind == RGLRU:
+        w = cfg.rglru.lru_width or cfg.d_model
+        return {"conv": ParamSpec((batch, cfg.rglru.d_conv - 1, w),
+                                  ("batch", None, "rnn"), init="zeros", dtype=dt),
+                "h": ParamSpec((batch, w), ("batch", "rnn"), init="zeros",
+                               dtype=jnp.float32)}
+    raise ValueError(kind)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, s_max: int) -> List[Any]:
+    segs = []
+    for seg in layer_plan(cfg):
+        segs.append([_stack_spec(block_cache_spec(cfg, k, batch, s_max), seg.repeats)
+                     for (k, _) in seg.pattern])
+    return segs

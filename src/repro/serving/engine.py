@@ -1,0 +1,168 @@
+"""Batched serving engine: continuous batching over fixed decode slots with
+per-request CARINA accounting.
+
+Design (vLLM-lite, TPU-idiomatic: fixed shapes, no paging):
+  * `slots` concurrent sequences share one (B, S_max) cache pytree;
+  * admission runs a single-sequence prefill and writes its cache entries
+    into the slot (per-leaf dynamic-update-slice);
+  * every engine tick decodes ALL active slots in one batched decode_step
+    (per-slot position indices — the vector-index decode path);
+  * finished slots are freed and refilled from the queue;
+  * each request is a CARINA tracked unit: runtime + estimated energy
+    (roofline mode when a StepCost is available) + carbon.
+
+Supported families: attention (full), MLA, mamba, rglru-hybrid — i.e. every
+assigned decoder arch; window-attention ring caches are filled from the
+tail of the prefill KV (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, LOCAL_ATTN
+from repro.core.controller import CarinaController
+from repro.models.model import Model
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S_prompt,) int32
+    max_new: int = 16
+    # filled by the engine
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_finish: float = 0.0
+
+
+def _write_slot(cache, prefill_cache, slot: int, cfg: ModelConfig,
+                prompt_len: int):
+    """Merge a single-sequence prefill cache into batch cache at `slot`."""
+    plan = T.layer_plan(cfg)
+    new_cache = []
+    for seg, seg_c, seg_p in zip(plan, cache, prefill_cache):
+        seg_out = []
+        for (kind, _), c, pc in zip(seg.pattern, seg_c, seg_p):
+            upd = dict(c)
+            if "k" in c:                       # attention KV
+                s_cache = c["k"].shape[2]      # (L, B, S, kv, hd)
+                for key in ("k", "v"):
+                    src = pc[key]              # (L, 1, S_p, kv, hd)
+                    if kind == LOCAL_ATTN or src.shape[2] > s_cache:
+                        # ring/window: keep the last s_cache positions at
+                        # slot j = pos % s_cache
+                        take = min(s_cache, src.shape[2])
+                        tail = src[:, :, src.shape[2] - take:]
+                        pos = jnp.arange(src.shape[2] - take, src.shape[2])
+                        dest = pos % s_cache
+                        upd[key] = c[key].at[:, slot].set(
+                            jnp.zeros_like(c[key][:, slot]).at[:, dest].set(
+                                tail[:, 0]))
+                    else:
+                        upd[key] = c[key].at[:, slot, :src.shape[2]].set(src[:, 0])
+            if "c_kv" in c:                    # MLA latent cache
+                for key in ("c_kv", "k_rope"):
+                    src = pc[key]
+                    upd[key] = c[key].at[:, slot, :src.shape[2]].set(src[:, 0])
+            if "ssm" in c:                     # mamba states
+                upd["ssm"] = c["ssm"].at[:, slot].set(pc["ssm"][:, 0])
+                upd["conv"] = c["conv"].at[:, slot].set(pc["conv"][:, 0])
+            if "h" in c:                       # rglru state
+                upd["h"] = c["h"].at[:, slot].set(pc["h"][:, 0])
+                upd["conv"] = c["conv"].at[:, slot].set(pc["conv"][:, 0])
+            seg_out.append(upd)
+        new_cache.append(seg_out)
+    return new_cache
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 s_max: int = 256, controller: Optional[CarinaController] = None,
+                 eos_id: int = -1):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.slots = slots
+        self.s_max = s_max
+        self.controller = controller
+        self.eos_id = eos_id
+        self.cache = model.cache_zeros(slots, s_max)
+        self.lengths = np.zeros((slots,), np.int32)      # current position
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+        self._next_rid = 0
+        self.completed: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
+        r = Request(self._next_rid, np.asarray(prompt, np.int32), max_new,
+                    t_submit=time.monotonic())
+        self._next_rid += 1
+        self.queue.append(r)
+        return r.rid
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            r = self.queue.pop(0)
+            batch = {"tokens": jnp.asarray(r.prompt[None, :])}
+            logits, pc = self._prefill(self.params, batch)
+            self.cache = _write_slot(self.cache, pc, slot, self.cfg,
+                                     len(r.prompt))
+            first = int(jnp.argmax(logits[0]))
+            r.generated.append(first)
+            self.active[slot] = r
+            self.lengths[slot] = len(r.prompt)
+
+    # ------------------------------------------------------------------
+    def tick(self) -> int:
+        """One engine iteration: admit + one batched decode step.
+        Returns number of active slots."""
+        self._admit()
+        act = [s for s in range(self.slots) if self.active[s] is not None]
+        if not act:
+            return 0
+        t0 = time.monotonic()
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for s in act:
+            tokens[s, 0] = self.active[s].generated[-1]
+        idx = jnp.asarray(self.lengths)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens), idx)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for s in act:
+            r = self.active[s]
+            r.generated.append(int(nxt[s]))
+            self.lengths[s] += 1
+            if (len(r.generated) >= r.max_new
+                    or int(nxt[s]) == self.eos_id
+                    or self.lengths[s] >= self.s_max - 1):
+                r.done = True
+                r.t_finish = time.monotonic()
+                self.completed.append(r)
+                self.active[s] = None
+                self.lengths[s] = 0
+        if self.controller is not None:
+            d = self.controller.decide()
+            self.controller.record_unit(
+                d, steps=1, runtime_s=time.monotonic() - t0,
+                meta={"active": len(act)})
+        return len(act)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and all(a is None for a in self.active):
+                break
+            self.tick()
+        return self.completed

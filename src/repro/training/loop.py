@@ -1,0 +1,190 @@
+"""Training driver: data -> train_step -> CARINA tracking -> checkpoints,
+under a fault-tolerance supervisor with elastic re-meshing.
+
+Structure (DESIGN.md §4: a *campaign* of tracked *units*):
+
+    for each unit (N steps):
+        decision = controller.decide()            # CARINA band -> intensity
+        if decision.replicas changed: checkpoint, re-mesh, restore (elastic)
+        run N steps (failure injection + straggler detection hooks)
+        controller.record_unit(...)               # energy/carbon accounting
+        checkpoint every K units (async)
+
+    on WorkerFailure: supervisor.on_failure -> ElasticPlan; restore latest
+    checkpoint on the (possibly smaller) mesh; resume from step counter.
+    The data pipeline is a pure function of step => bit-exact resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
+                                         restore_checkpoint)
+from repro.core.controller import CarinaController, IntensityDecision
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.fault_tolerance import (FailureInjector, StragglerDetector,
+                                               Supervisor, WorkerFailure)
+from repro.distributed.sharding import batch_tree_sharding, sharding_tree
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.training.step import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    steps_per_unit: int = 10
+    ckpt_dir: Optional[str] = None
+    ckpt_every_units: int = 1
+    keep: int = 3
+    seed: int = 0
+    log_every: int = 0
+
+
+@dataclasses.dataclass
+class LoopResult:
+    final_step: int
+    state: Any
+    metrics_history: list
+    restarts: int
+    straggler_events: int
+
+
+def _place_state(state, model: Model, mesh):
+    if mesh is None:
+        return jax.tree.map(jnp.asarray, state)
+    shardings = sharding_tree(model.logical_axes(), model.abstract_params(), mesh)
+    # opt moments share param shardings; scalars replicated
+    from repro.distributed.sharding import replicated
+    full = {"params": shardings,
+            "opt": {"m": shardings, "v": shardings, "step": replicated(mesh)}}
+    if "residuals" in state:
+        full["residuals"] = shardings
+    return jax.tree.map(lambda a, s: jax.device_put(np.asarray(jax.device_get(a)), s),
+                        state, full)
+
+
+def run_training(model: Model, opt_cfg: AdamWConfig, data: SyntheticLM,
+                 loop_cfg: LoopConfig, *,
+                 controller: Optional[CarinaController] = None,
+                 injector: Optional[FailureInjector] = None,
+                 detector: Optional[StragglerDetector] = None,
+                 supervisor: Optional[Supervisor] = None,
+                 mesh_fn: Optional[Callable[[int], Any]] = None,
+                 initial_replicas: int = 1) -> LoopResult:
+    supervisor = supervisor or Supervisor()
+    detector = detector or StragglerDetector()
+    replicas = initial_replicas
+    mesh = mesh_fn(replicas) if mesh_fn else None
+    ckptr = AsyncCheckpointer(loop_cfg.ckpt_dir, loop_cfg.keep) \
+        if loop_cfg.ckpt_dir else None
+
+    # ---- init or restore ---------------------------------------------------
+    step = 0
+    state = None
+    if loop_cfg.ckpt_dir and latest_step(loop_cfg.ckpt_dir) is not None:
+        state, meta = _restore(model, opt_cfg, loop_cfg, mesh)
+        step = int(meta.get("step", latest_step(loop_cfg.ckpt_dir)))
+    if state is None:
+        state = init_train_state(model, jax.random.PRNGKey(loop_cfg.seed), opt_cfg)
+        state = _place_state(state, model, mesh)
+
+    step_cache: Dict[Any, Any] = {}
+
+    def jitted_for(mesh_):
+        key = id(mesh_) if mesh_ is not None else None
+        if key not in step_cache:
+            fn = make_train_step(model, opt_cfg)
+            step_cache[key] = jax.jit(fn, donate_argnums=(0,))
+        return step_cache[key]
+
+    metrics_history = []
+    unit = 0
+    while step < loop_cfg.total_steps:
+        decision = (controller.decide() if controller
+                    else IntensityDecision("none", 1.0, replicas, 1.0))
+        # ---- elastic resize --------------------------------------------------
+        if mesh_fn and decision.replicas != replicas and loop_cfg.ckpt_dir:
+            ckptr.submit(step, state, {"step": step})
+            ckptr.wait()
+            replicas = decision.replicas
+            mesh = mesh_fn(replicas)
+            state, _ = _restore(model, opt_cfg, loop_cfg, mesh)
+
+        t_unit0 = time.monotonic()
+        try:
+            n = min(loop_cfg.steps_per_unit, loop_cfg.total_steps - step)
+            for _ in range(n):
+                if injector is not None:
+                    injector.check(step)
+                batch_np = data.batch_at(step)
+                if mesh is not None:
+                    sh = batch_tree_sharding(
+                        mesh, jax.tree.map(
+                            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                            batch_np))
+                    batch = jax.tree.map(jax.device_put, batch_np, sh)
+                else:
+                    batch = jax.tree.map(jnp.asarray, batch_np)
+                t0 = time.monotonic()
+                if mesh is not None:
+                    with mesh:
+                        state, metrics = jitted_for(mesh)(state, batch)
+                else:
+                    state, metrics = jitted_for(mesh)(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.monotonic() - t0
+                ev = detector.observe(step, dt)
+                if ev is not None and detector.should_exclude(ev) and controller:
+                    # straggler exclusion: force a shrink decision next unit
+                    controller.max_replicas = max(1, controller.max_replicas - 1)
+                step += 1
+                if loop_cfg.log_every and step % loop_cfg.log_every == 0:
+                    metrics_history.append(
+                        {k: float(v) for k, v in metrics.items()} | {"step": step})
+            if controller is not None:
+                controller.record_unit(decision, steps=n,
+                                       runtime_s=time.monotonic() - t_unit0,
+                                       meta={"unit": unit})
+            unit += 1
+            if ckptr and unit % loop_cfg.ckpt_every_units == 0:
+                ckptr.submit(step, state, {"step": step})
+        except WorkerFailure as e:
+            plan = supervisor.on_failure(step, replicas, e)
+            if ckptr:
+                ckptr.wait()
+            replicas = plan.replicas
+            mesh = mesh_fn(replicas) if mesh_fn else None
+            if loop_cfg.ckpt_dir and latest_step(loop_cfg.ckpt_dir) is not None:
+                state, meta = _restore(model, opt_cfg, loop_cfg, mesh)
+                step = int(meta.get("step", 0))
+            else:  # no checkpoint yet: restart from scratch
+                state = init_train_state(model, jax.random.PRNGKey(loop_cfg.seed),
+                                         opt_cfg)
+                state = _place_state(state, model, mesh)
+                step = 0
+
+    if ckptr:
+        ckptr.submit(step, state, {"step": step})
+        ckptr.wait()
+    return LoopResult(step, state, metrics_history, len(supervisor.restarts),
+                      len(detector.events))
+
+
+def _restore(model: Model, opt_cfg: AdamWConfig, loop_cfg: LoopConfig, mesh):
+    from repro.training.step import abstract_train_state
+    like = abstract_train_state(model, opt_cfg)
+    shardings = None
+    if mesh is not None:
+        from repro.distributed.sharding import replicated
+        ps = sharding_tree(model.logical_axes(), model.abstract_params(), mesh)
+        shardings = {"params": ps, "opt": {"m": ps, "v": ps,
+                                           "step": replicated(mesh)}}
+    state, meta = restore_checkpoint(loop_cfg.ckpt_dir, like, shardings=shardings)
+    return state, meta

@@ -1,0 +1,13 @@
+import os
+
+# Tests run single-device CPU (the dry-run sets its own 512-device flags in a
+# separate process).  A couple of multi-device tests spawn subprocesses.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
