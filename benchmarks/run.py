@@ -2,6 +2,8 @@
 roofline/kernel benches.  Prints ``name,us_per_call,derived`` CSV rows.
 
   fig1_policy_frontier   Figure 1: runtime-penalty vs energy-savings frontier
+  frontier_sweep         vectorized sweep engine vs sequential simulation
+                         (120 schedules in one NumPy pass; core/engine.py)
   oem_case_studies       §3 case-study table (measured vs simulated vs paper)
   campaign_projection    CARINA applied to a TPU training campaign (dry-run
                          StepCost -> kWh/CO2e for a real recurring retrain)
@@ -55,6 +57,37 @@ def fig1_policy_frontier():
     emit("fig1/paper_claim_boosted", 0.0,
          f"paper(-9%,+7%)_ours({boosted.energy_delta_pct:+.1f}%,"
          f"{boosted.runtime_delta_pct:+.1f}%)")
+
+
+def frontier_sweep():
+    """Vectorized sweep engine vs sequential simulate_campaign on a
+    120-schedule candidate set (acceptance bar: >=10x on >=100 schedules)."""
+    from repro.core import (MachineProfile, SweepCase, calibrate_workload,
+                            constant_schedule, hourly_schedule,
+                            simulate_campaign, sweep)
+    from repro.core.workload import OEM_CASE_1
+
+    wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+    scheds = ([constant_schedule(0.10 + 0.90 * i / 59) for i in range(60)]
+              + [hourly_schedule(f"hourly_{i}",
+                                 [0.2 + 0.8 * ((3 * i + h) % 24) / 23
+                                  for h in range(24)]) for i in range(60)])
+    cases = [SweepCase(s, wl, m) for s in scheds]
+    sweep(cases[:2])                      # warm engine caches
+    simulate_campaign(wl, scheds[0], m)
+
+    t0 = time.perf_counter()
+    seq = [simulate_campaign(wl, s, m) for s in scheds]
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vec = sweep(cases)
+    t_vec = time.perf_counter() - t0
+    err = max(abs(a.energy_kwh / b.energy_kwh - 1) for a, b in zip(vec, seq))
+    emit("sweep/sequential_120", t_seq * 1e6 / len(scheds),
+         f"total_ms={t_seq * 1e3:.1f}")
+    emit("sweep/vectorized_120", t_vec * 1e6 / len(scheds),
+         f"total_ms={t_vec * 1e3:.1f}_speedup={t_seq / t_vec:.1f}x_"
+         f"maxerr={err:.1e}")
 
 
 def oem_case_studies():
@@ -164,6 +197,7 @@ def kernel_micro():
 def main() -> None:
     print("name,us_per_call,derived")
     fig1_policy_frontier()
+    frontier_sweep()
     oem_case_studies()
     campaign_projection()
     roofline_table()

@@ -21,11 +21,9 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-
+import repro.carina as carina
 from repro.configs import get_config
-from repro.core import (CarinaController, POLICIES, RunTracker, SimClock,
-                        render_run_dashboard)
+from repro.core import POLICIES, SimClock
 from repro.data.pipeline import SyntheticLM
 from repro.distributed.fault_tolerance import (FailureInjector, Supervisor)
 from repro.models import build_model
@@ -64,11 +62,13 @@ def main():
 
     opt = AdamWConfig(total_steps=args.steps, warmup_steps=max(args.steps // 10, 1))
     data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
-    tracker = RunTracker(f"{cfg.name}-{args.policy}",
-                         log_path="experiments/carbon_aware/units.jsonl")
-    controller = CarinaController(
-        policy=POLICIES[args.policy], tracker=tracker, max_replicas=1,
-        clock=SimClock(start_hour=9.0, speedup=3600.0))
+    campaign = carina.Campaign(
+        carina.TrainingCampaign(f"{cfg.name}-{args.policy}", cfg.name,
+                                total_steps=args.steps, steps_per_unit=5),
+        POLICIES[args.policy],
+        name=f"{cfg.name}-{args.policy}", out_dir="experiments/carbon_aware")
+    controller = campaign.controller(
+        max_replicas=1, clock=SimClock(start_hour=9.0, speedup=3600.0))
     injector = FailureInjector(
         fail_at_steps=(args.inject_failure_at,) if args.inject_failure_at >= 0
         else ())
@@ -83,7 +83,8 @@ def main():
     print(f"finished at step {res.final_step}, restarts={res.restarts}")
     for m in res.metrics_history[-5:]:
         print(f"  step {m['step']:4d} loss {m['loss']:.4f}")
-    md = render_run_dashboard(tracker.close(), "experiments/carbon_aware")
+    summary = campaign.finish(render=False)
+    md = carina.render_run_dashboard(summary, "experiments/carbon_aware")
     print()
     print(md)
 

@@ -1,23 +1,29 @@
-"""Reproduce the paper's Figure 1 and §3 OEM case studies: simulate all six
-execution policies against the calibrated measured baselines, print the
-frontier, and write dashboard artifacts (md/json/png).
+"""Reproduce the paper's Figure 1 and §3 OEM case studies through the
+session API: one Campaign per case gives the calibrated six-policy
+frontier, dashboard artifacts (md/json/png), and — new with the
+vectorized sweep engine — a 100-point intensity sweep mapping the whole
+runtime/energy frontier in milliseconds.
 
     PYTHONPATH=src python examples/policy_comparison.py
 """
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import policy_frontier, render_frontier_dashboard
-from repro.core.workload import OEM_CASE_1, OEM_CASE_2
+import repro.carina as carina
 
 
 def main():
-    for case, paper_boosted_kwh in ((OEM_CASE_1, 44.3), (OEM_CASE_2, 67.5)):
+    for case, paper_boosted_kwh in ((carina.OEM_CASE_1, 44.3),
+                                    (carina.OEM_CASE_2, 67.5)):
         print(f"=== {case.name}: measured baseline "
               f"{case.measured_hours} h, {case.measured_kwh} kWh")
-        res = policy_frontier(case)
+        campaign = carina.Campaign(
+            case, out_dir=f"experiments/frontier/{case.name}",
+            name=f"policy frontier — {case.name}")
+        res = campaign.frontier(render=True)
         for r in res:
             print(f"  {r.policy:30s} {r.runtime_h:8.2f} h {r.energy_kwh:7.2f} kWh"
                   f"  dT={r.runtime_delta_pct:+6.2f}%  dE={r.energy_delta_pct:+6.2f}%"
@@ -27,10 +33,19 @@ def main():
               f"(paper: ~{paper_boosted_kwh}); paper claim (-9%, +7%), "
               f"ours ({boosted.energy_delta_pct:+.1f}%, "
               f"{boosted.runtime_delta_pct:+.1f}%)")
-        render_frontier_dashboard(
-            res, f"experiments/frontier/{case.name}",
-            title=f"policy frontier — {case.name}")
         print(f"  dashboard -> experiments/frontier/{case.name}/")
+
+        # Beyond the six fixed policies: sweep 100 candidate intensities
+        # through the vectorized engine and report the efficient frontier.
+        sweeps = [carina.constant_schedule(0.10 + 0.90 * i / 99)
+                  for i in range(100)]
+        t0 = time.perf_counter()
+        swept = campaign.sweep(sweeps, deltas=False)
+        dt = (time.perf_counter() - t0) * 1e3
+        best = min(swept, key=lambda r: r.energy_kwh)
+        print(f"  100-schedule sweep in {dt:.1f} ms: lowest-energy constant "
+              f"intensity {best.policy} -> {best.energy_kwh:.1f} kWh "
+              f"({best.runtime_h:.0f} h)")
         print()
 
 

@@ -1,5 +1,5 @@
-"""Quickstart: train a small LM under CARINA tracking and print the
-run dashboard.  Runs in ~1 minute on CPU.
+"""Quickstart: train a small LM under a CARINA campaign session and print
+the run dashboard.  Runs in ~1 minute on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,11 +8,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-
+import repro.carina as carina
 from repro.configs import get_config
-from repro.core import (CarinaController, PEAK_AWARE_BOOSTED, RunTracker,
-                        SimClock, render_run_dashboard)
 from repro.data.pipeline import SyntheticLM
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
@@ -27,10 +24,15 @@ def main():
     opt = AdamWConfig(total_steps=30, warmup_steps=3, peak_lr=1e-3)
     data = SyntheticLM(cfg, batch=4, seq=64)
 
-    tracker = RunTracker("quickstart", log_path="experiments/quickstart/units.jsonl")
-    controller = CarinaController(
-        policy=PEAK_AWARE_BOOSTED, tracker=tracker, max_replicas=1,
-        clock=SimClock(start_hour=12.0, speedup=7200.0))  # 1s wall = 2h sim
+    # One session object owns tracking, carbon translation and reporting:
+    campaign = carina.Campaign(
+        carina.TrainingCampaign("quickstart", cfg.name,
+                                total_steps=30, steps_per_unit=5),
+        carina.PEAK_AWARE_BOOSTED,
+        name="quickstart", out_dir="experiments/quickstart")
+    controller = campaign.controller(
+        max_replicas=1,
+        clock=carina.SimClock(start_hour=12.0, speedup=7200.0))  # 1s = 2h sim
 
     res = run_training(model, opt, data,
                        LoopConfig(total_steps=30, steps_per_unit=5, log_every=5),
@@ -39,7 +41,8 @@ def main():
     for m in res.metrics_history:
         print(f"  step {m['step']:3d} loss {m['loss']:.4f} lr {m['lr']:.2e}")
 
-    md = render_run_dashboard(tracker.close(), "experiments/quickstart")
+    summary = campaign.finish(render=False)
+    md = carina.render_run_dashboard(summary, "experiments/quickstart")
     print()
     print(md)
 

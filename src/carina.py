@@ -1,0 +1,6 @@
+"""Top-level alias so `import carina` works with PYTHONPATH=src.
+
+The canonical module is `repro.carina`; this keeps the paper-style
+`carina.Campaign(...)` spelling available without the package prefix.
+"""
+from repro.carina import *  # noqa: F401,F403

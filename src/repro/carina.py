@@ -1,0 +1,41 @@
+"""The public CARINA surface in one namespace.
+
+    import repro.carina as carina
+
+    report = carina.Campaign(carina.OEM_CASE_1,
+                             carina.PEAK_AWARE_BOOSTED).run()
+    table = carina.Campaign(carina.OEM_CASE_1).frontier()
+    swept = carina.Campaign(carina.OEM_CASE_1).sweep(
+        [carina.constant_schedule(u / 100) for u in range(10, 101)])
+
+See docs/API.md for the Schedule / Signal / Campaign contract and the
+migration table from the old free functions.
+"""
+from repro.core import (  # noqa: F401
+    # session API
+    Campaign, CampaignReport,
+    # scheduling surface
+    Decision, FunctionSchedule, HourlyPolicy, Policy, Schedule,
+    SchedulingContext, as_schedule, constant_schedule, hourly_schedule,
+    make_carbon_aware_policy, make_carbon_weighted_boosted,
+    # the six Figure-1 policies
+    BASELINE, PEAK_AWARE_BOOSTED, PEAK_AWARE_AGGRESSIVE, LOW_PRIORITY_ONLY,
+    SMALL_BATCHES, LARGE_BATCHES, POLICIES,
+    # signals
+    Signal, SignalSet, BandSignal, ConstantSignal, HourlySignal, TOU_PRICE,
+    background_signal, carbon_signal, default_signals,
+    # time structure + models
+    BANDS, TimeBands, GridCarbonModel, MIDWEST_HOURLY, DTE_FACTOR,
+    ChipProfile, EnergyModel, MachineProfile, StepCost,
+    # sweep engine
+    SweepCase, frontier_from_sweep, hourly_profile, sweep,
+    # execution + tracking
+    CarinaController, IntensityDecision, SimClock, RunTracker, RunSummary,
+    UnitRecord, load_units, merge_summaries, summary_from_units,
+    # workloads + back-compat free functions
+    OEMWorkload, OEM_CASE_1, OEM_CASE_2, TrainingCampaign, SimResult,
+    calibrate_workload, policy_frontier, simulate_campaign,
+    simulate_campaign_exact,
+    # reporting
+    render_frontier_dashboard, render_run_dashboard,
+)

@@ -1,0 +1,28 @@
+"""Cross-version jax API aliases.
+
+`shard_map` moved from `jax.experimental.shard_map` to the jax namespace
+and renamed its replication-check kwarg (`check_rep` -> `check_vma`).
+Import it from here with the new-style `check_vma` spelling and it works
+on both sides of the move.  `axis_size` appeared in jax.lax later than
+`axis_index`; the fallback is the standard psum-of-ones identity.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)

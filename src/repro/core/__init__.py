@@ -1,14 +1,34 @@
-"""CARINA: Carbon-Aware Recurrent INdustrial Analytics (the paper's core)."""
+"""CARINA: Carbon-Aware Recurrent INdustrial Analytics (the paper's core).
+
+New code should reach for the session API (`repro.carina.Campaign`, the
+`Schedule`/`Signal` protocols, and the vectorized `sweep` engine); the
+free functions `simulate_campaign` / `policy_frontier` and direct
+`Policy` subclassing remain as back-compat shims.
+"""
 from repro.core.carbon import DTE_FACTOR, GridCarbonModel, MIDWEST_HOURLY  # noqa: F401
-from repro.core.controller import CarinaController, SimClock  # noqa: F401
+from repro.core.controller import CarinaController, IntensityDecision, SimClock  # noqa: F401
 from repro.core.dashboard import render_frontier_dashboard, render_run_dashboard  # noqa: F401
 from repro.core.energy import (ChipProfile, EnergyModel, MachineProfile,  # noqa: F401
                                StepCost)
+from repro.core.engine import SweepCase, frontier_from_sweep, hourly_profile, sweep  # noqa: F401
 from repro.core.policy import (BANDS, BASELINE, LARGE_BATCHES,  # noqa: F401
                                LOW_PRIORITY_ONLY, PEAK_AWARE_AGGRESSIVE,
                                PEAK_AWARE_BOOSTED, POLICIES, SMALL_BATCHES,
-                               Policy, TimeBands)
+                               HourlyPolicy, Policy, TimeBands,
+                               constant_schedule, hourly_schedule,
+                               make_carbon_aware_policy,
+                               make_carbon_weighted_boosted)
+from repro.core.schedule import (Decision, FunctionSchedule, Schedule,  # noqa: F401
+                                 SchedulingContext, as_schedule)
+from repro.core.session import Campaign, CampaignReport  # noqa: F401
+from repro.core.signal import (TOU_PRICE, BandSignal, ConstantSignal,  # noqa: F401
+                               HourlySignal, Signal, SignalSet,
+                               background_signal, carbon_signal,
+                               default_signals)
 from repro.core.simulator import (SimResult, calibrate_workload,  # noqa: F401
-                                  policy_frontier, simulate_campaign)
-from repro.core.tracker import RunSummary, RunTracker, UnitRecord, merge_summaries  # noqa: F401
+                                  fill_deltas, policy_frontier,
+                                  simulate_campaign, simulate_campaign_exact)
+from repro.core.tracker import (RunSummary, RunTracker, UnitRecord,  # noqa: F401
+                                load_units, merge_summaries,
+                                summary_from_units)
 from repro.core.workload import OEM_CASE_1, OEM_CASE_2, OEMWorkload, TrainingCampaign  # noqa: F401

@@ -3,23 +3,29 @@
 
 Per tracked unit (a training round of N steps) the controller:
   1. determines the local time phase (band) — simulated or wall clock;
-  2. selects worker intensity from the policy;
+  2. asks the Schedule for a decision (worker intensity) given the full
+     SchedulingContext (band, background load, carbon intensity);
   3. maps intensity -> TPU knobs:
-       * active dp replicas: floor(u * max_replicas)  (elastic width; a
-         change triggers checkpoint + re-mesh in the training loop),
-       * duty cycle: fractional remainder is implemented as sleep between
-         steps (priority-reduction analogue),
+       * active dp replicas: floor(u * max_replicas), plus one extra
+         duty-cycled replica whenever there is a fractional remainder
+         (elastic width; a change triggers checkpoint + re-mesh in the
+         training loop),
+       * duty cycle: u / (replicas / max_replicas) — the fractional
+         remainder of the last replica is realized as sleep between steps
+         (priority-reduction analogue), so replicas * duty == u exactly;
   4. after execution records runtime / energy estimate / carbon into the
      RunTracker (roofline-mode energy when a compiled StepCost is known).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Optional, Tuple
+import math
+from typing import Optional
 
+from repro.core.carbon import GridCarbonModel
 from repro.core.energy import ChipProfile, EnergyModel, StepCost
-from repro.core.policy import Policy, TimeBands, BASELINE
+from repro.core.policy import BASELINE, TimeBands
+from repro.core.schedule import SchedulingContext, as_schedule
 from repro.core.tracker import RunTracker
 
 
@@ -47,13 +53,16 @@ class SimClock:
 
 
 class CarinaController:
-    def __init__(self, policy: Policy = BASELINE, bands: TimeBands = TimeBands(),
+    def __init__(self, policy=BASELINE, bands: TimeBands = TimeBands(),
                  tracker: Optional[RunTracker] = None,
                  max_replicas: int = 1, min_replicas: int = 1,
                  clock: Optional[SimClock] = None,
                  chip: ChipProfile = ChipProfile(),
-                 step_cost: Optional[StepCost] = None):
-        self.policy = policy
+                 step_cost: Optional[StepCost] = None,
+                 carbon: Optional[GridCarbonModel] = None,
+                 price=None):
+        self.policy = policy                      # kept for introspection
+        self.schedule = as_schedule(policy)
         self.bands = bands
         self.tracker = tracker
         self.max_replicas = max_replicas
@@ -61,15 +70,32 @@ class CarinaController:
         self.clock = clock or SimClock()
         self.energy = EnergyModel(chip=chip)
         self.step_cost = step_cost
+        self.carbon = carbon or (tracker.carbon if tracker is not None
+                                 else GridCarbonModel())
+        self.price = price                        # optional price Signal
         self.decisions = []
 
     # ---- Algorithm 1 lines 6-8 -------------------------------------------
     def decide(self) -> IntensityDecision:
-        band = self.bands.band_at(self.clock.hour_of_day())
-        u = self.policy.intensity_at(band)
-        replicas = max(self.min_replicas,
-                       min(self.max_replicas, round(u * self.max_replicas)))
-        # intensity realized by replica count; duty cycle covers the remainder
+        hour = self.clock.hour_of_day()
+        band = self.bands.band_at(hour)
+        ctx = SchedulingContext(
+            hour_of_day=hour, band=band,
+            background=self.bands.background(band),
+            carbon_factor=self.carbon.factor_at(hour),
+            price_usd_per_kwh=(self.price.at(hour)
+                               if self.price is not None else 0.0))
+        u = float(self.schedule.decide(ctx).intensity)
+        # floor(u * max) full replicas; a fractional remainder adds one more
+        # replica whose surplus capacity the duty cycle sleeps away, so
+        # realized * duty == u (no part of u is silently dropped, which is
+        # what round() did when it rounded down).
+        want = u * self.max_replicas
+        replicas = math.floor(want + 1e-9)
+        if want - replicas > 1e-9:
+            replicas += 1
+        replicas = max(self.min_replicas, min(self.max_replicas, replicas))
+        replicas = max(replicas, 1)
         realized = replicas / self.max_replicas
         duty = min(1.0, u / realized) if realized > 0 else 1.0
         d = IntensityDecision(band, u, replicas, duty)

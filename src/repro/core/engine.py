@@ -1,0 +1,262 @@
+"""Vectorized sweep engine: evaluate many (schedule x workload x grid-curve)
+combinations in one batched NumPy pass.
+
+The sequential simulators walk a campaign segment by segment in Python;
+fine for six policies, too slow for the ROADMAP goal of sweeping "as many
+scenarios as you can imagine".  This engine exploits the structure every
+bundled schedule and signal share: decisions and signals are periodic over
+24 h and piecewise-constant per hour (band edges fall on integer hours).
+A campaign is then a periodic piecewise-linear accumulation of scenarios,
+energy, CO2e and cost, so for S cases we can:
+
+  1. sample each case's schedule/signals onto a 24-slot hourly grid
+     (S x 24 arrays of intensity, batch, background, carbon, price);
+  2. derive per-slot scenario/energy/CO2e/cost *rates* with closed-form
+     NumPy expressions (same contention + convex-power model as the
+     sequential simulator);
+  3. jump over whole days with integer arithmetic and resolve the final
+     partial day with one cumulative-sum search — no per-segment loop.
+
+Agreement with the per-batch oracle `simulate_campaign_exact` is pinned to
+<0.5 % by tests/test_session_engine.py (the same tolerance the coarse
+sequential path is held to); against the coarse sequential path the engine
+agrees to float precision (both integrate the same piecewise-hourly
+model).  Schedules that vary within an
+hour are not representable on the hourly grid, nor are schedules that
+consult the progress/elapsed_h context fields (the grid is sampled once
+with both at zero) — use the sequential simulators for those.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.carbon import GridCarbonModel
+from repro.core.energy import MachineProfile
+from repro.core.policy import TimeBands
+from repro.core.schedule import Schedule, SchedulingContext, as_schedule
+from repro.core.signal import Signal, sample_hourly
+from repro.core.simulator import SimResult, fill_deltas
+from repro.core.workload import OEMWorkload
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCase:
+    """One point of a sweep: a schedule run against one scenario setup."""
+    schedule: Schedule
+    workload: OEMWorkload
+    machine: MachineProfile = MachineProfile()
+    bands: TimeBands = TimeBands()
+    carbon: Optional[GridCarbonModel] = None
+    start_hour: float = 9.0
+    label: str = ""
+
+    def name(self) -> str:
+        return self.label or as_schedule(self.schedule).name
+
+
+def _band_table(bands: TimeBands):
+    """(band_name[24], background[24]) for one TimeBands, memoized — band
+    lookups are the hot part of profile sampling in large sweeps."""
+    key = bands  # frozen dataclass -> hashable
+    hit = _band_table.cache.get(key)
+    if hit is None:
+        if any(float(e) % 1.0 for e in bands.edges()):
+            raise ValueError(
+                "the vectorized engine samples bands on the hourly grid and "
+                "cannot represent sub-hour band edges; use the sequential "
+                "simulators for these TimeBands")
+        names = [bands.band_at(float(h)) for h in range(24)]
+        hit = (names, np.array([bands.background(b) for b in names]))
+        _band_table.cache[key] = hit
+    return hit
+
+
+_band_table.cache = {}
+
+
+def _carbon_table(carbon: GridCarbonModel) -> np.ndarray:
+    try:
+        hit = _carbon_table.cache.get(carbon)
+    except TypeError:                       # unhashable hourly_curve (list)
+        return np.array(sample_hourly(carbon))
+    if hit is None:
+        hit = np.array(sample_hourly(carbon))
+        _carbon_table.cache[carbon] = hit
+    return hit
+
+
+_carbon_table.cache = {}
+
+
+def hourly_profile(schedule, bands: TimeBands, carbon: GridCarbonModel,
+                   price: Optional[Signal] = None):
+    """Sample a schedule's decisions on the 24-hour grid.
+
+    Returns (intensity[24], batch[24]).  Exact for any schedule whose
+    decision is constant within each local hour (all bundled ones are).
+    The bundled Policy/HourlyPolicy classes take a closed-form path; any
+    schedule with its own decide() is sampled through the full context.
+    """
+    from repro.core.policy import HourlyPolicy, Policy
+
+    sched = as_schedule(schedule)
+    band_names, bg24 = _band_table(bands)
+    decide = type(sched).decide if isinstance(sched, Policy) else None
+    if decide is HourlyPolicy.decide and sched.hourly_intensity:
+        u = np.array(sched.hourly_intensity, dtype=float)
+        if sched.low_priority:
+            u = u * 0.82
+        return u, np.full(24, float(sched.batch_size))
+    if decide in (Policy.decide, HourlyPolicy.decide):
+        per_band = {b: sched.intensity_at(b) for b in set(band_names)}
+        u = np.array([per_band[b] for b in band_names])
+        return u, np.full(24, float(sched.batch_size))
+
+    cf24 = _carbon_table(carbon)
+    pr24 = ([price.at(float(h)) for h in range(24)] if price is not None
+            else None)
+    u = np.empty(24)
+    batch = np.empty(24)
+    for h in range(24):
+        ctx = SchedulingContext(
+            hour_of_day=float(h), band=band_names[h],
+            background=float(bg24[h]), carbon_factor=float(cf24[h]),
+            price_usd_per_kwh=pr24[h] if pr24 is not None else 0.0)
+        d = sched.decide(ctx)
+        # the grid is sampled once per hour-of-day and reused for every
+        # simulated day, so a schedule that consults progress/elapsed_h is
+        # not representable — probe at a different campaign position and
+        # refuse rather than return silently wrong sweep numbers
+        d_late = sched.decide(dataclasses.replace(
+            ctx, elapsed_h=24.0 + h, progress=0.5))
+        if (d_late.intensity, d_late.batch_size) != (d.intensity,
+                                                     d.batch_size):
+            raise ValueError(
+                f"schedule {sched.name!r} varies with campaign progress/"
+                "elapsed time; the vectorized engine's periodic hourly grid "
+                "cannot represent it — use the sequential simulators")
+        u[h] = d.intensity
+        batch[h] = d.batch_size
+    return u, batch
+
+
+def sweep(cases: Sequence[SweepCase],
+          price: Optional[Signal] = None) -> List[SimResult]:
+    """Evaluate all cases in one vectorized pass; order is preserved."""
+    if not len(cases):
+        return []
+    S = len(cases)
+    u = np.empty((S, 24))
+    batch = np.empty((S, 24))
+    bg = np.empty((S, 24))
+    cf = np.empty((S, 24))
+    pr = np.zeros((S, 24))
+    n_scen = np.empty(S)
+    rate = np.empty(S)
+    oh_s = np.empty(S)
+    idle = np.empty(S)
+    dyn = np.empty(S)
+    alpha = np.empty(S)
+    gamma = np.empty(S)
+    ohfrac = np.empty(S)
+    start = np.empty(S)
+
+    pr24 = (np.array([price.at(float(h)) for h in range(24)])
+            if price is not None else None)
+    for i, c in enumerate(cases):
+        carbon = c.carbon or GridCarbonModel()
+        u[i], batch[i] = hourly_profile(c.schedule, c.bands, carbon, price)
+        bg[i] = _band_table(c.bands)[1]
+        cf[i] = _carbon_table(carbon)
+        if pr24 is not None:
+            pr[i] = pr24
+        n_scen[i] = c.workload.n_scenarios
+        rate[i] = c.workload.rate_at_full
+        oh_s[i] = c.workload.batch_overhead_s
+        m = c.machine
+        idle[i], dyn[i], alpha[i] = m.idle_w, m.dyn_w, m.alpha
+        gamma[i], ohfrac[i] = m.gamma, m.overhead_w_frac
+        start[i] = c.start_hour
+
+    # ---- per-slot rates (same model as the sequential simulator) ----------
+    r_eff = rate[:, None] * u * np.maximum(1.0 - gamma[:, None] * bg, 0.05)
+    work_t = batch / np.maximum(r_eff, 1e-9)          # work seconds per batch
+    batch_time = oh_s[:, None] + work_t
+    scen_rate = batch / batch_time                    # scenarios per second
+    work_frac = work_t / batch_time
+    p_work = idle[:, None] + dyn[:, None] * np.maximum(u + bg, 0.0) ** alpha[:, None]
+    p_oh = idle[:, None] + dyn[:, None] * \
+        np.maximum(ohfrac[:, None] * u + bg, 0.0) ** alpha[:, None]
+    p_avg = work_frac * p_work + (1.0 - work_frac) * p_oh
+    kwh_rate = p_avg / 3.6e6                          # kWh per second
+    co2_rate = kwh_rate * cf
+    cost_rate = kwh_rate * pr
+
+    # ---- slot sequence of one 24 h period starting at start_hour ----------
+    # K = 25 slots: a (possibly zero-length) partial leading slot, 23 full
+    # hours, and the trailing remainder of the leading hour.
+    h0 = np.floor(start).astype(int)
+    frac = start - h0                                  # fraction into hour h0
+    K = 25
+    k = np.arange(K)
+    slot_hour = (h0[:, None] + k[None, :]) % 24        # (S, K)
+    lens = np.full((S, K), 3600.0)
+    lens[:, 0] = (1.0 - frac) * 3600.0
+    lens[:, 24] = frac * 3600.0
+
+    scen_seq = np.take_along_axis(scen_rate, slot_hour, axis=1) * lens
+    kwh_seq = np.take_along_axis(kwh_rate, slot_hour, axis=1) * lens
+    co2_seq = np.take_along_axis(co2_rate, slot_hour, axis=1) * lens
+    cost_seq = np.take_along_axis(cost_rate, slot_hour, axis=1) * lens
+
+    day_scen = scen_seq.sum(axis=1)
+    days = np.floor(n_scen / day_scen)
+    residual = n_scen - days * day_scen                # scenarios past midnight N
+
+    # find the slot where the residual completes (first cum >= residual)
+    cum_scen = np.cumsum(scen_seq, axis=1)
+    k_stop = np.minimum((cum_scen < residual[:, None] - 1e-9).sum(axis=1),
+                        K - 1)
+    rows = np.arange(S)
+    before = cum_scen[rows, k_stop] - scen_seq[rows, k_stop]
+    stop_rate = np.take_along_axis(scen_rate, slot_hour, axis=1)[rows, k_stop]
+    tail_s = np.maximum(residual - before, 0.0) / np.maximum(stop_rate, 1e-30)
+
+    def total(per_seg, per_s_rate):
+        excl = np.cumsum(per_seg, axis=1) - per_seg    # sum of slots < k_stop
+        day_total = per_seg.sum(axis=1)
+        seq_rate = np.take_along_axis(per_s_rate, slot_hour, axis=1)
+        return (days * day_total + excl[rows, k_stop]
+                + seq_rate[rows, k_stop] * tail_s)
+
+    lens_excl = np.cumsum(lens, axis=1) - lens
+    runtime_s = days * 86400.0 + lens_excl[rows, k_stop] + tail_s
+    energy = total(kwh_seq, kwh_rate)
+    co2 = total(co2_seq, co2_rate)
+    cost = total(cost_seq, cost_rate)
+
+    out = []
+    for i, c in enumerate(cases):
+        out.append(SimResult(
+            policy=c.name(), runtime_h=float(runtime_s[i]) / 3600.0,
+            energy_kwh=float(energy[i]), co2_kg=float(co2[i]),
+            cost_usd=float(cost[i]) if price is not None else None))
+    return out
+
+
+def frontier_from_sweep(results: List[SimResult],
+                        baseline_name: str = "baseline",
+                        base: Optional[SimResult] = None) -> List[SimResult]:
+    """Fill the delta-vs-baseline columns of a sweep in place.
+
+    The reference is `base` when given, else the swept result named
+    `baseline_name`; with neither, results are returned unchanged.
+    """
+    if base is None:
+        base = next((r for r in results if r.policy == baseline_name), None)
+    if base is None:
+        return results
+    return fill_deltas(results, base)

@@ -9,6 +9,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Tuple
 
+from repro.core.schedule import Decision, SchedulingContext
+
 PEAK = "peak"
 LOAD_SENSITIVE = "load_sensitive"
 SHOULDER = "shoulder"
@@ -44,6 +46,16 @@ class TimeBands:
             out[self.band_at(h)] += 1.0
         return out
 
+    def edges(self) -> Tuple[float, ...]:
+        """Sorted hours in [0, 24] where the band (and hence the background
+        load) can change — the segmentation grid for band-level schedules."""
+        hs = {0.0, 24.0}
+        for ranges in (self.peak, self.load_sensitive, self.shoulder):
+            for lo, hi in ranges:
+                hs.add(float(lo) % 24.0)
+                hs.add(24.0 if hi == 24 else float(hi) % 24.0)
+        return tuple(sorted(hs))
+
     # background (interactive/office) load per band — the contention model
     # (calibrated jointly with MachineProfile; EXPERIMENTS.md §Paper-validation)
     def background(self, band: str) -> float:
@@ -63,9 +75,22 @@ class Policy:
         u = self.intensity[band]
         return u * 0.82 if self.low_priority else u
 
+    # ---- Schedule protocol -------------------------------------------------
+    def decide(self, ctx: SchedulingContext) -> Decision:
+        return Decision(self.intensity_at(ctx.band), self.batch_size)
+
+    def change_hours(self, bands: "TimeBands") -> Tuple[float, ...]:
+        return bands.edges()
+
 
 def _const(u: float) -> Dict[str, float]:
     return {b: u for b in BANDS}
+
+
+def constant_schedule(u: float, batch_size: int = 50,
+                      name: str = "") -> Policy:
+    """A constant-intensity Schedule (sweep-engine building block)."""
+    return Policy(name or f"const_{u:.2f}", _const(u), batch_size=batch_size)
 
 
 # The six Figure-1 policies.  Baseline runs at a constant working intensity;
@@ -109,14 +134,41 @@ class HourlyPolicy(Policy):
         u = self.hourly_intensity[int(hour) % 24]
         return u * 0.82 if self.low_priority else u
 
+    # ---- Schedule protocol -------------------------------------------------
+    def decide(self, ctx: SchedulingContext) -> Decision:
+        if not self.hourly_intensity:        # un-filled: fall back to bands
+            return Decision(self.intensity_at(ctx.band), self.batch_size)
+        return Decision(self.intensity_at_hour(ctx.hour_of_day),
+                        self.batch_size)
+
+    def change_hours(self, bands: TimeBands) -> Tuple[float, ...]:
+        if not self.hourly_intensity:
+            return bands.edges()
+        return tuple(float(h) for h in range(25))
+
+
+def hourly_schedule(name: str, intensities, batch_size: int = 50) -> HourlyPolicy:
+    """A 24-slot hourly Schedule (sweep-engine building block)."""
+    vals = tuple(float(v) for v in intensities)
+    if len(vals) != 24:
+        raise ValueError(f"hourly_schedule needs 24 intensities, got {len(vals)}")
+    return HourlyPolicy(name, _const(0.85), batch_size, False, vals)
+
+
+def _carbon_values(carbon):
+    """Hourly carbon factors from a GridCarbonModel *or* any Signal."""
+    from repro.core.signal import sample_hourly
+    return list(sample_hourly(carbon))
+
 
 def make_carbon_aware_policy(carbon, u_low: float = 0.30, u_high: float = 1.0,
                              batch_size: int = 50) -> HourlyPolicy:
     """Map normalized grid carbon intensity -> worker intensity (inverse
     linear): full speed in the cleanest hours, u_low in the dirtiest.
     Pure-carbon following; see make_carbon_weighted_boosted for the variant
-    that dominates (EXPERIMENTS.md bonus B4)."""
-    vals = [carbon.factor_at(h) for h in range(24)]
+    that dominates (EXPERIMENTS.md bonus B4).  `carbon` may be a
+    GridCarbonModel or any carbon Signal."""
+    vals = _carbon_values(carbon)
     lo, hi = min(vals), max(vals)
     rng = (hi - lo) or 1.0
     inten = tuple(u_high - (v - lo) / rng * (u_high - u_low) for v in vals)
@@ -131,7 +183,7 @@ def make_carbon_weighted_boosted(carbon, bands: TimeBands = TimeBands(),
     modulated ±swing/2 by the normalized hourly grid carbon intensity.
     Strictly dominates plain boosted on runtime, energy AND CO2e under a
     time-varying grid (tests/test_carina.py::test_carbon_weighted_dominates)."""
-    vals = [carbon.factor_at(h) for h in range(24)]
+    vals = _carbon_values(carbon)
     lo, hi = min(vals), max(vals)
     rng = (hi - lo) or 1.0
     inten = []

@@ -1,0 +1,129 @@
+"""The unified scheduling surface (Algorithm 1 line 6, generalized).
+
+Everything that decides "how hard to work right now" — the six fixed
+Figure-1 policies, the hourly carbon-aware factories, and any future
+forecast-driven scheduler — implements one protocol:
+
+    class Schedule(Protocol):
+        name: str
+        def decide(self, ctx: SchedulingContext) -> Decision
+
+The context carries the local hour, the time band, and the current values
+of every input Signal (background load, carbon intensity, price); the
+decision carries worker intensity and orchestration batch size.  This
+kills the `hasattr(policy, "intensity_at_hour")` duck typing that used to
+be copy-pasted in both simulators and the controller.
+
+Segmentation metadata: simulators and the vectorized engine need to know
+when a schedule's decision can change.  `change_hours(schedule, bands)`
+returns the sorted hour-of-day breakpoints (subset of [0, 24]); band
+schedules change only at band edges, hourly schedules every hour, and
+anything unknown conservatively every hour.  All bundled signals are
+hourly-constant, so the hourly grid is always a safe refinement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol, Tuple, runtime_checkable
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulingContext:
+    """Everything a schedule may consult for one decision."""
+    hour_of_day: float           # local time, [0, 24)
+    band: str                    # time band at this hour
+    background: float            # background (office) load, [0, 1]
+    carbon_factor: float         # grid intensity, kg CO2e / kWh
+    price_usd_per_kwh: float = 0.0
+    elapsed_h: float = 0.0       # hours since campaign start
+    progress: float = 0.0        # fraction of the workload completed, [0, 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One scheduling decision: how hard to work and at what granularity."""
+    intensity: float             # worker intensity u in [0, 1]
+    batch_size: int = 50         # orchestration batch size
+    note: str = ""               # free-form provenance (dashboards/logs)
+
+
+@runtime_checkable
+class Schedule(Protocol):
+    """Anything with a name that can turn a context into a decision."""
+
+    name: str
+
+    def decide(self, ctx: SchedulingContext) -> Decision:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Segmentation metadata
+# ---------------------------------------------------------------------------
+HOURLY_GRID: Tuple[float, ...] = tuple(float(h) for h in range(25))
+
+
+def change_hours(schedule, bands) -> Tuple[float, ...]:
+    """Sorted hours in [0, 24] at which `schedule`'s decision may change.
+
+    Schedules may implement `change_hours(bands)` themselves (band policies
+    return the band edges); anything else is assumed hourly-constant, which
+    is exact for every bundled signal and schedule.
+    """
+    fn = getattr(schedule, "change_hours", None)
+    if callable(fn):
+        return tuple(fn(bands))
+    return HOURLY_GRID
+
+
+# ---------------------------------------------------------------------------
+# Adapters
+# ---------------------------------------------------------------------------
+class FunctionSchedule:
+    """Wrap a plain `ctx -> intensity` callable as a Schedule."""
+
+    def __init__(self, name: str, fn: Callable[[SchedulingContext], float],
+                 batch_size: int = 50):
+        self.name = name
+        self._fn = fn
+        self.batch_size = batch_size
+
+    def decide(self, ctx: SchedulingContext) -> Decision:
+        return Decision(float(self._fn(ctx)), self.batch_size)
+
+
+class _LegacyPolicyAdapter:
+    """Back-compat shim for pre-Schedule duck-typed policy objects.
+
+    Anything exposing the old `intensity_at(band)` (and optionally
+    `intensity_at_hour(hour)` + `hourly_intensity`) surface keeps working;
+    new code should subclass/implement Schedule directly.
+    """
+
+    def __init__(self, policy):
+        self._policy = policy
+        self.name = getattr(policy, "name", type(policy).__name__)
+        self.batch_size = getattr(policy, "batch_size", 50)
+
+    def decide(self, ctx: SchedulingContext) -> Decision:
+        p = self._policy
+        if hasattr(p, "intensity_at_hour") and getattr(p, "hourly_intensity", ()):
+            u = p.intensity_at_hour(ctx.hour_of_day)
+        else:
+            u = p.intensity_at(ctx.band)
+        return Decision(float(u), self.batch_size)
+
+    def change_hours(self, bands) -> Tuple[float, ...]:
+        p = self._policy
+        if hasattr(p, "intensity_at_hour") and getattr(p, "hourly_intensity", ()):
+            return HOURLY_GRID
+        return bands.edges()
+
+
+def as_schedule(obj) -> Schedule:
+    """Coerce policies (old or new) into the Schedule protocol."""
+    if hasattr(obj, "decide"):
+        return obj
+    if hasattr(obj, "intensity_at") or hasattr(obj, "intensity_at_hour"):
+        return _LegacyPolicyAdapter(obj)
+    raise TypeError(f"cannot interpret {obj!r} as a Schedule")

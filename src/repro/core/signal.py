@@ -1,0 +1,120 @@
+"""Time-varying input signals (paper §2 instrumentation + stated future work).
+
+A Signal is any time-of-day-varying scalar input the scheduler or the
+simulator consumes: background office load, grid carbon intensity,
+electricity price.  The paper hard-wires the first two (band levels in
+`TimeBands.background`, an hourly multiplier in `GridCarbonModel`); this
+module lifts them behind one interface so a live forecast feed — the
+paper's "continuously updated regional carbon-intensity feeds" — can later
+implement the same protocol without touching the simulator or the engine.
+
+All bundled signals are periodic over 24 h and piecewise-constant per hour
+(band boundaries fall on integer hours), which is what lets the vectorized
+sweep engine (core/engine.py) evaluate them as 24-vectors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class Signal(Protocol):
+    """A scalar input varying with local time-of-day."""
+
+    name: str
+
+    def at(self, hour_of_day: float) -> float:
+        """Value at the given local hour (any float; wraps mod 24)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantSignal:
+    """Flat signal (e.g. the paper's single DTE grid factor)."""
+    value: float
+    name: str = "constant"
+
+    def at(self, hour_of_day: float) -> float:
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class HourlySignal:
+    """24-slot piecewise-constant signal (one value per local hour)."""
+    values: Tuple[float, ...]
+    name: str = "hourly"
+
+    def __post_init__(self):
+        if len(self.values) != 24:
+            raise ValueError(
+                f"HourlySignal needs exactly 24 values, got {len(self.values)}")
+
+    def at(self, hour_of_day: float) -> float:
+        return self.values[int(hour_of_day) % 24]
+
+
+@dataclasses.dataclass(frozen=True)
+class BandSignal:
+    """Signal defined per time band (e.g. background office load).
+
+    `bands` is a TimeBands instance (duck-typed to avoid the import cycle);
+    `levels` maps band name -> value.
+    """
+    bands: object
+    levels: dict
+    name: str = "band"
+
+    def at(self, hour_of_day: float) -> float:
+        return self.levels[self.bands.band_at(hour_of_day)]
+
+
+def background_signal(bands) -> BandSignal:
+    """The paper's contention model as a Signal: band -> background load."""
+    from repro.core.policy import BANDS
+    return BandSignal(bands, {b: bands.background(b) for b in BANDS},
+                      name="background")
+
+
+def sample_hourly(source) -> Tuple[float, ...]:
+    """24 hourly samples from a GridCarbonModel or any Signal — the one
+    place the hour grid is applied to a signal (engine, factories, and
+    carbon_signal all build on this)."""
+    at = getattr(source, "factor_at", None) or source.at
+    return tuple(at(float(h)) for h in range(24))
+
+
+def carbon_signal(carbon) -> Signal:
+    """Grid carbon intensity (kg CO2e / kWh) as a Signal."""
+    if getattr(carbon, "hourly_curve", None) is None:
+        return ConstantSignal(carbon.factor_kg_per_kwh, name="carbon")
+    return HourlySignal(sample_hourly(carbon), name="carbon")
+
+
+# ---------------------------------------------------------------------------
+# Electricity price (new input class; DTE-like time-of-use tariff).
+# Off-peak 0.11 $/kWh, mid-day shoulder 0.15, on-peak 15-19 h at 0.21.
+# ---------------------------------------------------------------------------
+DTE_TOU_HOURLY: Tuple[float, ...] = (
+    0.11, 0.11, 0.11, 0.11, 0.11, 0.11, 0.11, 0.15,
+    0.15, 0.15, 0.15, 0.15, 0.15, 0.15, 0.15, 0.21,
+    0.21, 0.21, 0.21, 0.21, 0.15, 0.15, 0.11, 0.11,
+)
+
+TOU_PRICE = HourlySignal(DTE_TOU_HOURLY, name="dte-tou-price")
+
+
+@dataclasses.dataclass(frozen=True)
+class SignalSet:
+    """The bundle of signals a scheduling decision may consult."""
+    background: Signal
+    carbon: Signal
+    price: Optional[Signal] = None
+
+    def price_at(self, hour_of_day: float) -> float:
+        return self.price.at(hour_of_day) if self.price is not None else 0.0
+
+
+def default_signals(bands, carbon, price: Optional[Signal] = None) -> SignalSet:
+    return SignalSet(background=background_signal(bands),
+                     carbon=carbon_signal(carbon), price=price)

@@ -1,29 +1,38 @@
 """Campaign simulator: executes a recurrent workload under an execution
-policy over simulated wall-clock, producing the Figure-1 runtime/energy
+schedule over simulated wall-clock, producing the Figure-1 runtime/energy
 frontier and the OEM case-study tables.
 
 Mechanics (all estimation-based, per the paper's method):
-  * time advances batch by batch; each batch sees the band at its start;
+  * time advances segment by segment; a segment ends wherever the schedule's
+    decision or any input signal can change (`schedule.change_hours`);
   * effective throughput R_eff = R * u * (1 - gamma * b)   (contention);
   * machine power P(u, b) = idle + dyn * (u + b)^alpha      (convex);
   * per-batch orchestration overhead runs at overhead power (no work);
   * energy is whole-machine over the campaign (that is what the paper's
     kWh figures measure: 48.67 kWh / 180.30 h = 270 W average).
 
+All scheduling goes through `Schedule.decide(SchedulingContext)` — there is
+no duck-typed `intensity_at_hour` probing here anymore; old policy objects
+are coerced via `repro.core.schedule.as_schedule`.
+
 Calibration: R is solved so the baseline policy reproduces the measured
 runtime exactly, then dyn_w so it reproduces the measured kWh exactly.
 The six policy *deltas* are then genuine model predictions, validated
-against the paper's reported numbers (benchmarks/policy_frontier.py).
+against the paper's reported numbers (benchmarks/run.py).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core.carbon import GridCarbonModel
-from repro.core.energy import EnergyModel, MachineProfile
-from repro.core.policy import (BANDS, BASELINE, POLICIES, Policy, TimeBands)
+from repro.core.energy import MachineProfile
+from repro.core.policy import BASELINE, POLICIES, TimeBands
+from repro.core.schedule import (Schedule, SchedulingContext, as_schedule,
+                                 change_hours)
+from repro.core.signal import Signal
 from repro.core.tracker import RunSummary, RunTracker
 from repro.core.workload import OEMWorkload
 
@@ -36,39 +45,82 @@ class SimResult:
     co2_kg: float
     runtime_delta_pct: float = 0.0   # vs baseline (+ = slower)
     energy_delta_pct: float = 0.0    # vs baseline (- = saves)
+    cost_usd: Optional[float] = None  # set when a price Signal is supplied
     summary: Optional[RunSummary] = None
 
 
-def simulate_campaign(workload: OEMWorkload, policy: Policy,
-                      machine: MachineProfile,
+def _segment_grid(schedule: Schedule, bands: TimeBands,
+                  hourly_signals: bool = False) -> List[float]:
+    """Hours in [0, 24) where the decision or any integrated quantity may
+    change.
+
+    Union of the band edges (background changes there) and the schedule's
+    own change hours; always contains 0.0 so the cyclic successor of the
+    last breakpoint is 24.0 + grid[0] == 24.0.  When an hourly-varying
+    signal (grid carbon curve, price tariff) is active, segments must not
+    span hours — a multi-hour band segment would be carbonized/priced
+    entirely at its start hour — so the grid refines to every hour.
+    """
+    hs = {float(h) for h in range(24)} if hourly_signals else {0.0}
+    for h in bands.edges():
+        hs.add(float(h) % 24.0)
+    for h in change_hours(schedule, bands):
+        hs.add(float(h) % 24.0)
+    return sorted(hs)
+
+
+def _next_boundary(grid: List[float], hour: float) -> float:
+    """Smallest grid hour strictly greater than `hour` (cyclic, in (h, 24])."""
+    i = bisect.bisect_right(grid, hour + 1e-9)
+    return grid[i] if i < len(grid) else 24.0 + grid[0]
+
+
+def simulate_campaign(workload: OEMWorkload, policy, machine: MachineProfile,
                       bands: TimeBands = TimeBands(),
                       carbon: Optional[GridCarbonModel] = None,
                       start_hour: float = 9.0,
                       tracker: Optional[RunTracker] = None,
-                      coarse: bool = True) -> SimResult:
-    """Simulate the full campaign. `coarse=True` advances band-by-band
-    (exact for piecewise-constant bands, ~1000x faster than per-batch)."""
+                      coarse: bool = True,
+                      price: Optional[Signal] = None) -> SimResult:
+    """Simulate the full campaign under any Schedule (or legacy Policy).
+
+    `coarse=True` advances segment-by-segment (exact for piecewise-constant
+    decisions, ~1000x faster than per-batch); `coarse=False` delegates to
+    the per-batch reference oracle `simulate_campaign_exact`.
+
+    This free function is the back-compat surface; prefer
+    `repro.carina.Campaign` for new code (it owns calibration, tracking,
+    and dashboards) and `repro.core.engine.sweep` for many-schedule sweeps.
+    """
+    if not coarse:
+        return simulate_campaign_exact(workload, policy, machine, bands,
+                                       carbon, start_hour, price=price)
     carbon = carbon or GridCarbonModel()
-    em = EnergyModel(machine=machine)
-    remaining = float(workload.n_scenarios)
+    schedule = as_schedule(policy)
+    grid = _segment_grid(
+        schedule, bands,
+        hourly_signals=(price is not None or carbon.hourly_curve is not None))
+    n_total = float(workload.n_scenarios)
+    remaining = n_total
     t_h = start_hour
     energy_kwh = 0.0
     co2_kg = 0.0
-    batch = policy.batch_size
+    cost_usd = 0.0
     per_batch_oh = workload.batch_overhead_s
 
-    hourly = hasattr(policy, "intensity_at_hour") and \
-        getattr(policy, "hourly_intensity", ())
     while remaining > 0:
-        band = bands.band_at(t_h)
-        u = policy.intensity_at_hour(t_h) if hourly else policy.intensity_at(band)
+        h = t_h % 24.0
+        band = bands.band_at(h)
         b = bands.background(band)
-        # time until next band boundary (hourly policies: next hour)
-        nxt = math.floor(t_h) + 1
-        if not hourly:
-            while bands.band_at(nxt % 24.0) == band and nxt - t_h < 24.0:
-                nxt += 1
-        seg_h = nxt - t_h
+        ctx = SchedulingContext(
+            hour_of_day=h, band=band, background=b,
+            carbon_factor=carbon.factor_at(h),
+            price_usd_per_kwh=price.at(h) if price is not None else 0.0,
+            elapsed_h=t_h - start_hour,
+            progress=1.0 - remaining / n_total)
+        d = schedule.decide(ctx)
+        u, batch = d.intensity, d.batch_size
+        seg_h = _next_boundary(grid, h) - h
 
         r_eff = workload.rate_at_full * u * max(1.0 - machine.gamma * b, 0.05)
         batch_time_s = per_batch_oh + batch / max(r_eff, 1e-9)
@@ -88,42 +140,58 @@ def simulate_campaign(workload: OEMWorkload, policy: Policy,
             machine.overhead_w_frac * u + b) ** machine.alpha
         p_avg = work_frac * p_work + (1 - work_frac) * p_oh
         e_kwh = p_avg * seg_s / 3.6e6
-        c_kg = carbon.co2_kg(e_kwh, hour_of_day=t_h % 24.0)
+        c_kg = carbon.co2_kg(e_kwh, hour_of_day=h)
         energy_kwh += e_kwh
         co2_kg += c_kg
+        if price is not None:
+            cost_usd += e_kwh * ctx.price_usd_per_kwh
         if tracker is not None:
+            # sim_time_h is absolute simulated time (hour-of-day = % 24),
+            # matching the controller's clock.hours, so the tracker's
+            # hour-aware CO2 uses the same grid hour this segment ran in
             tracker.record_unit(phase=band, intensity=u, runtime_s=seg_s,
-                                energy_kwh=e_kwh,
-                                sim_time_h=t_h - start_hour,
+                                energy_kwh=e_kwh, sim_time_h=t_h,
                                 meta={"scenarios": done, "batch": batch})
         remaining -= done
         t_h += seg_s / 3600.0
 
     runtime_h = t_h - start_hour
-    return SimResult(policy.name, runtime_h, energy_kwh, co2_kg,
+    return SimResult(schedule.name, runtime_h, energy_kwh, co2_kg,
+                     cost_usd=cost_usd if price is not None else None,
                      summary=tracker.summary() if tracker else None)
 
 
-def simulate_campaign_exact(workload: OEMWorkload, policy: Policy,
+def simulate_campaign_exact(workload: OEMWorkload, policy,
                             machine: MachineProfile,
                             bands: TimeBands = TimeBands(),
                             carbon: Optional[GridCarbonModel] = None,
-                            start_hour: float = 9.0) -> SimResult:
+                            start_hour: float = 9.0,
+                            price: Optional[Signal] = None) -> SimResult:
     """Batch-by-batch reference simulation (each batch is atomic and sees the
-    band at its start — the segment-based simulate_campaign splits batches at
-    band boundaries; tests/test_carina.py checks they agree to <0.5 %)."""
+    band at its start — the segment-based simulate_campaign and the
+    vectorized engine split batches at boundaries; tests pin agreement to
+    <0.5 %).  This is the per-batch oracle the sweep engine is checked
+    against."""
     carbon = carbon or GridCarbonModel()
-    hourly = hasattr(policy, "intensity_at_hour") and \
-        getattr(policy, "hourly_intensity", ())
-    remaining = float(workload.n_scenarios)
+    schedule = as_schedule(policy)
+    n_total = float(workload.n_scenarios)
+    remaining = n_total
     t_h = start_hour
     energy_kwh = 0.0
     co2_kg = 0.0
-    batch = policy.batch_size
+    cost_usd = 0.0
     while remaining > 0:
-        band = bands.band_at(t_h)
-        u = policy.intensity_at_hour(t_h) if hourly else policy.intensity_at(band)
+        h = t_h % 24.0
+        band = bands.band_at(h)
         b = bands.background(band)
+        ctx = SchedulingContext(
+            hour_of_day=h, band=band, background=b,
+            carbon_factor=carbon.factor_at(h),
+            price_usd_per_kwh=price.at(h) if price is not None else 0.0,
+            elapsed_h=t_h - start_hour,
+            progress=1.0 - remaining / n_total)
+        d = schedule.decide(ctx)
+        u, batch = d.intensity, d.batch_size
         r_eff = workload.rate_at_full * u * max(1.0 - machine.gamma * b, 0.05)
         n = min(batch, remaining)
         t_work = n / max(r_eff, 1e-9)
@@ -133,10 +201,13 @@ def simulate_campaign_exact(workload: OEMWorkload, policy: Policy,
             machine.overhead_w_frac * u + b) ** machine.alpha
         e = (p_work * t_work + p_oh * t_oh) / 3.6e6
         energy_kwh += e
-        co2_kg += carbon.co2_kg(e, hour_of_day=t_h % 24.0)
+        co2_kg += carbon.co2_kg(e, hour_of_day=h)
+        if price is not None:
+            cost_usd += e * ctx.price_usd_per_kwh
         t_h += (t_work + t_oh) / 3600.0
         remaining -= n
-    return SimResult(policy.name, t_h - start_hour, energy_kwh, co2_kg)
+    return SimResult(schedule.name, t_h - start_hour, energy_kwh, co2_kg,
+                     cost_usd=cost_usd if price is not None else None)
 
 
 # ---------------------------------------------------------------------------
@@ -180,20 +251,29 @@ def calibrate_workload(workload: OEMWorkload, machine: MachineProfile,
     return wl, m
 
 
+def fill_deltas(results: List[SimResult], base: SimResult) -> List[SimResult]:
+    """Fill the delta-vs-baseline columns in place (single definition used
+    by the frontier, the session API, and the sweep engine)."""
+    for r in results:
+        r.runtime_delta_pct = 100.0 * (r.runtime_h / base.runtime_h - 1.0)
+        r.energy_delta_pct = 100.0 * (r.energy_kwh / base.energy_kwh - 1.0)
+    return results
+
+
 def policy_frontier(workload: OEMWorkload,
                     machine: MachineProfile = MachineProfile(),
                     bands: TimeBands = TimeBands(),
                     carbon: Optional[GridCarbonModel] = None,
                     calibrate: bool = True) -> List[SimResult]:
-    """The Figure-1 table: all six policies vs the measured baseline."""
+    """The Figure-1 table: all six policies vs the measured baseline.
+
+    Back-compat shim — `repro.carina.Campaign(...).frontier()` is the
+    session-level equivalent and `Campaign.sweep(...)` the vectorized one.
+    """
     if calibrate:
         workload, machine = calibrate_workload(workload, machine, bands)
     base = simulate_campaign(workload, BASELINE, machine, bands, carbon)
-    out = []
-    for p in POLICIES.values():
-        r = (base if p.name == BASELINE.name
-             else simulate_campaign(workload, p, machine, bands, carbon))
-        r.runtime_delta_pct = 100.0 * (r.runtime_h / base.runtime_h - 1.0)
-        r.energy_delta_pct = 100.0 * (r.energy_kwh / base.energy_kwh - 1.0)
-        out.append(r)
-    return out
+    out = [base if p.name == BASELINE.name
+           else simulate_campaign(workload, p, machine, bands, carbon)
+           for p in POLICIES.values()]
+    return fill_deltas(out, base)

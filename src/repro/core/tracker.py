@@ -10,7 +10,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from typing import Any, Dict, List, Optional
 
 from repro.core.carbon import GridCarbonModel
@@ -24,7 +23,7 @@ class UnitRecord:
     runtime_s: float
     energy_kwh: float
     co2_kg: float
-    sim_time_h: float             # campaign wall-clock position (hours)
+    sim_time_h: float             # absolute simulated clock (hour-of-day = % 24)
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> str:
@@ -59,8 +58,18 @@ class RunTracker:
         self._log_file = None
         if log_path:
             os.makedirs(os.path.dirname(log_path) or ".", exist_ok=True)
+            # a crashed predecessor may have left a torn (newline-less)
+            # final line; isolate it so resumed records stay parseable
+            if os.path.exists(log_path) and os.path.getsize(log_path) > 0:
+                with open(log_path, "rb") as f:
+                    f.seek(-1, os.SEEK_END)
+                    torn = f.read(1) != b"\n"
+            else:
+                torn = False
             self._log_file = open(log_path, "a", buffering=1)
-        self._open_accum = {"runtime_s": 0.0, "energy_kwh": 0.0}
+            if torn:
+                self._log_file.write("\n")
+        self._open_accum = {"runtime_s": 0.0, "energy_kwh": 0.0, "co2_kg": 0.0}
 
     # ------------------------------------------------------------------
     def record_unit(self, *, phase: str, intensity: float, runtime_s: float,
@@ -68,8 +77,11 @@ class RunTracker:
                     meta: Optional[dict] = None) -> UnitRecord:
         co2 = self.carbon.co2_kg(energy_kwh, hour_of_day=sim_time_h % 24.0)
         if self.granularity == "run":
+            # accumulate the hour-aware CO2 too, so run-mode totals respect
+            # an hourly_curve instead of re-deriving at the flat factor
             self._open_accum["runtime_s"] += runtime_s
             self._open_accum["energy_kwh"] += energy_kwh
+            self._open_accum["co2_kg"] += co2
             rec = UnitRecord(len(self.records), phase, intensity, runtime_s,
                              energy_kwh, co2, sim_time_h, meta or {})
             return rec  # not appended; aggregated at close
@@ -86,7 +98,7 @@ class RunTracker:
             e = self._open_accum["energy_kwh"]
             self.records.append(UnitRecord(
                 0, "run", 1.0, self._open_accum["runtime_s"], e,
-                self.carbon.co2_kg(e), 0.0, {}))
+                self._open_accum["co2_kg"], 0.0, {}))
         by_phase: Dict[str, Dict[str, float]] = {}
         for r in self.records:
             d = by_phase.setdefault(r.phase, {"runtime_s": 0.0, "energy_kwh": 0.0,
@@ -113,6 +125,39 @@ class RunTracker:
             self._log_file.close()
             self._log_file = None
         return s
+
+
+def load_units(path: str) -> List[UnitRecord]:
+    """Recover the tracked units from a JSONL log (crash/resume path).
+
+    Malformed lines (a unit torn mid-write by a crash) are skipped, not
+    fatal — a resumed tracker appends to the same log, so valid records can
+    follow a torn one.  A crash loses at most the unit that was mid-write.
+    Summary lines from clean close() calls are skipped too.
+    """
+    units: List[UnitRecord] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                continue                   # torn mid-write: skip that unit
+            if "summary" in d:
+                continue
+            units.append(UnitRecord(**d))
+    return units
+
+
+def summary_from_units(units: List[UnitRecord], name: str = "resumed",
+                       meta: Optional[dict] = None) -> RunSummary:
+    """Re-aggregate recovered units into a RunSummary (same roll-up as
+    RunTracker.summary, without needing a live tracker)."""
+    t = RunTracker(name, meta=meta)
+    t.records = list(units)
+    return t.summary()
 
 
 def merge_summaries(summaries: List[RunSummary], name: str = "merged") -> RunSummary:

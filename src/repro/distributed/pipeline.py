@@ -25,6 +25,8 @@ import functools
 from typing import Any, Callable
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -73,7 +75,7 @@ def pipeline_apply(mesh: Mesh, stage_fn: Callable, stage_params: Any,
 
     in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P())
     out_specs = P(axis)
-    y = jax.shard_map(per_stage, mesh=mesh, in_specs=in_specs,
+    y = shard_map(per_stage, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_vma=False)(
         jax.tree.map(lambda t: t, stage_params), micro)
     # out dim0 = n_stages (one copy per stage); take the replicated copy

@@ -1,0 +1,10 @@
+"""Pallas API compatibility across jax versions.
+
+jax renamed the TPU compiler-params dataclass (`TPUCompilerParams` ->
+`CompilerParams`); resolve whichever this jax ships so the kernels run on
+both sides of the rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

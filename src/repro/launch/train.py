@@ -14,9 +14,9 @@ import dataclasses
 
 import jax
 
+import repro.carina as carina
 from repro.configs import ARCH_NAMES, get_config
-from repro.core import (CarinaController, POLICIES, RunTracker, SimClock,
-                        render_run_dashboard)
+from repro.core import POLICIES, SimClock
 from repro.data.pipeline import SyntheticLM
 from repro.distributed.fault_tolerance import Supervisor
 from repro.launch.mesh import make_mesh_for
@@ -57,15 +57,19 @@ def main():
     opt = AdamWConfig(total_steps=args.steps,
                       warmup_steps=max(1, args.steps // 10))
     data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
-    tracker = RunTracker(f"train-{cfg.name}")
-    # Algorithm 1 line 3: detect machine characteristics, initialize tracker
+    # Algorithm 1 line 3: detect machine characteristics, initialize session
     from repro.core.sysinfo import chip_profile_from_host, detect_host
     host = detect_host()
-    tracker.meta["host"] = host
-    controller = CarinaController(policy=POLICIES[args.policy],
-                                  tracker=tracker, max_replicas=n_dev,
-                                  clock=SimClock(start_hour=9.0, speedup=600.0),
-                                  chip=chip_profile_from_host(host))
+    campaign = carina.Campaign(
+        carina.TrainingCampaign(f"train-{cfg.name}", cfg.name,
+                                total_steps=args.steps, steps_per_unit=10),
+        POLICIES[args.policy],
+        name=f"train-{cfg.name}", out_dir="experiments/train_run")
+    controller = campaign.controller(
+        max_replicas=n_dev,
+        clock=SimClock(start_hour=9.0, speedup=600.0),
+        chip=chip_profile_from_host(host))
+    campaign.tracker.meta["host"] = host
     res = run_training(model, opt, data,
                        LoopConfig(total_steps=args.steps, steps_per_unit=10,
                                   ckpt_dir=args.ckpt_dir, log_every=10),
@@ -73,7 +77,8 @@ def main():
                        mesh_fn=mesh_fn if n_dev > 1 else None,
                        initial_replicas=n_dev)
     print(f"done at step {res.final_step}; restarts={res.restarts}")
-    print(render_run_dashboard(tracker.close(), "experiments/train_run"))
+    summary = campaign.finish(render=False)
+    print(carina.render_run_dashboard(summary, "experiments/train_run"))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,127 @@
+"""Deterministic stand-in for the subset of the `hypothesis` API this test
+suite uses, installed by conftest.py only when the real package is missing
+(the container cannot pip-install).  Not a property-based testing engine:
+each @given test runs a fixed number of pseudo-random examples from a
+seeded generator (plus the interval endpoints for scalar strategies), with
+no shrinking.  If real hypothesis is available it is always preferred.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import types
+
+_MAX_EXAMPLES_CAP = 25   # keep fallback suite runtime bounded
+_SEED = 0xCA51A
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rnd):
+        r = rnd.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return lo + (hi - lo) * rnd.random()
+
+    return _Strategy(draw)
+
+
+def _integers(min_value=0, max_value=100, **_kw):
+    return _Strategy(lambda rnd: rnd.randint(int(min_value), int(max_value)))
+
+
+def _booleans():
+    return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def _sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
+def _just(value):
+    return _Strategy(lambda rnd: value)
+
+
+def _lists(elements, min_size=0, max_size=10, **_kw):
+    def draw(rnd):
+        n = rnd.randint(int(min_size), int(max_size))
+        return [elements.example(rnd) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def _tuples(*elems):
+    return _Strategy(lambda rnd: tuple(e.example(rnd) for e in elems))
+
+
+strategies = types.SimpleNamespace(
+    floats=_floats, integers=_integers, booleans=_booleans,
+    sampled_from=_sampled_from, just=_just, lists=_lists, tuples=_tuples)
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+def given(*garg_strategies, **gkw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_max_examples", _MAX_EXAMPLES_CAP),
+                    _MAX_EXAMPLES_CAP)
+            rnd = random.Random(_SEED)
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < 10 * n:
+                attempts += 1
+                drawn = [s.example(rnd) for s in garg_strategies]
+                kw = {k: s.example(rnd) for k, s in gkw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **kw)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:
+                raise AssertionError(
+                    "hypothesis fallback: assume() rejected every example; "
+                    "the property was never exercised")
+        # pytest resolves fixtures through __wrapped__'s signature; the
+        # drawn parameters must not be mistaken for fixtures
+        del wrapper.__wrapped__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return decorate
+
+
+def settings(max_examples=_MAX_EXAMPLES_CAP, deadline=None, **_kw):
+    def decorate(fn):
+        # works whether applied above or below @given: the attribute is
+        # copied onto the wrapper by functools.wraps (below) or set on the
+        # wrapper directly (above)
+        fn._max_examples = int(max_examples)
+        return fn
+    return decorate
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
