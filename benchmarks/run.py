@@ -4,6 +4,9 @@ roofline/kernel benches.  Prints ``name,us_per_call,derived`` CSV rows.
   fig1_policy_frontier   Figure 1: runtime-penalty vs energy-savings frontier
   frontier_sweep         vectorized sweep engine vs sequential simulation
                          (120 schedules in one NumPy pass; core/engine.py)
+  trace_sweep            trace-grid JAX scan vs sequential simulation on a
+                         7-day carbon trace at S in {10, 120, 1000} cases
+                         (core/engine_jax.py)
   oem_case_studies       §3 case-study table (measured vs simulated vs paper)
   campaign_projection    CARINA applied to a TPU training campaign (dry-run
                          StepCost -> kWh/CO2e for a real recurring retrain)
@@ -88,6 +91,66 @@ def frontier_sweep():
     emit("sweep/vectorized_120", t_vec * 1e6 / len(scheds),
          f"total_ms={t_vec * 1e3:.1f}_speedup={t_seq / t_vec:.1f}x_"
          f"maxerr={err:.1e}")
+
+
+def trace_sweep():
+    """Trace-grid scan engine (jitted jax.lax.scan over a 7-day carbon
+    trace) vs sequential simulate_campaign at S in {10, 120, 1000} cases
+    (acceptance bar: >=10x at S=1000, or document the measured ratio)."""
+    from repro.core import (MachineProfile, SweepCase, TraceSignal,
+                            calibrate_workload, deadline_schedule,
+                            hourly_schedule, simulate_campaign)
+    from repro.core.engine_jax import _HAS_JAX, trace_sweep as run_trace
+    from repro.core.workload import OEM_CASE_1
+
+    wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+    rng = np.random.RandomState(7)
+    h = np.arange(168)
+    trace = TraceSignal(tuple(
+        0.448 * (1.0 + 0.30 * np.sin(2 * np.pi * h / 24.0)
+                 + 0.08 * np.sin(2 * np.pi * h / 168.0)
+                 + 0.05 * rng.randn(168))), name="week")
+
+    def cases_for(S):
+        scheds = [hourly_schedule(f"hourly_{i}",
+                                  [0.25 + 0.75 * ((5 * i + hh) % 24) / 23
+                                   for hh in range(24)]) for i in range(S)]
+        return [SweepCase(s, wl, m, carbon=trace) for s in scheds]
+
+    backend = "jax" if _HAS_JAX else "numpy"
+    for S in (10, 120, 1000):
+        cases = cases_for(S)
+        run_trace(cases, backend=backend)     # warm tables + jit cache
+        t0 = time.perf_counter()
+        vec = run_trace(cases, backend=backend)
+        t_vec = time.perf_counter() - t0
+        n_seq = min(S, 120)                   # sequential cost extrapolates
+        t0 = time.perf_counter()
+        seq = [simulate_campaign(c.workload, c.schedule, c.machine,
+                                 carbon=trace) for c in cases[:n_seq]]
+        t_seq = (time.perf_counter() - t0) * (S / n_seq)
+        err = max(abs(a.co2_kg / b.co2_kg - 1)
+                  for a, b in zip(vec[:n_seq], seq))
+        emit(f"trace_sweep/{backend}_S{S}", t_vec * 1e6 / S,
+             f"total_ms={t_vec * 1e3:.1f}_seq_ms={t_seq * 1e3:.1f}_"
+             f"speedup={t_seq / t_vec:.1f}x_maxerr={err:.1e}")
+
+    # a progress-aware fleet (deadline pace-keepers): the case family the
+    # periodic engine cannot represent at all
+    dls = [SweepCase(deadline_schedule(180.0 + 2.0 * i), wl, m, carbon=trace)
+           for i in range(60)]
+    run_trace(dls, backend=backend)
+    t0 = time.perf_counter()
+    run_trace(dls, backend=backend)
+    t_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for c in dls[:12]:
+        simulate_campaign(c.workload, c.schedule, c.machine, carbon=trace,
+                          deadline_h=c.deadline_h)
+    t_seq = (time.perf_counter() - t0) * (len(dls) / 12)
+    emit(f"trace_sweep/{backend}_deadline_60", t_vec * 1e6 / len(dls),
+         f"total_ms={t_vec * 1e3:.1f}_seq_ms={t_seq * 1e3:.1f}_"
+         f"speedup={t_seq / t_vec:.1f}x")
 
 
 def oem_case_studies():
@@ -194,15 +257,28 @@ def kernel_micro():
     emit("kernel/ssm_chunked_scan_2k", us3, "chunk=64")
 
 
-def main() -> None:
+BENCHES = {
+    "fig1_policy_frontier": fig1_policy_frontier,
+    "frontier_sweep": frontier_sweep,
+    "trace_sweep": trace_sweep,
+    "oem_case_studies": oem_case_studies,
+    "campaign_projection": campaign_projection,
+    "roofline_table": roofline_table,
+    "kernel_micro": kernel_micro,
+}
+
+
+def main(argv=None) -> None:
+    """Run the named benchmarks (all of them with no arguments)."""
+    names = argv if argv else list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s) {unknown}; "
+                         f"choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
-    fig1_policy_frontier()
-    frontier_sweep()
-    oem_case_studies()
-    campaign_projection()
-    roofline_table()
-    kernel_micro()
+    for n in names:
+        BENCHES[n]()
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

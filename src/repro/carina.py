@@ -15,19 +15,22 @@ from repro.core import (  # noqa: F401
     # session API
     Campaign, CampaignReport,
     # scheduling surface
-    Decision, FunctionSchedule, HourlyPolicy, Policy, Schedule,
-    SchedulingContext, as_schedule, constant_schedule, hourly_schedule,
-    make_carbon_aware_policy, make_carbon_weighted_boosted,
+    DeadlineSchedule, Decision, FunctionSchedule, HourlyPolicy, Policy,
+    Schedule, SchedulingContext, as_schedule, constant_schedule,
+    deadline_schedule, hourly_schedule, make_carbon_aware_policy,
+    make_carbon_weighted_boosted, progress_ramp_schedule,
     # the six Figure-1 policies
     BASELINE, PEAK_AWARE_BOOSTED, PEAK_AWARE_AGGRESSIVE, LOW_PRIORITY_ONLY,
     SMALL_BATCHES, LARGE_BATCHES, POLICIES,
     # signals
     Signal, SignalSet, BandSignal, ConstantSignal, HourlySignal, TOU_PRICE,
-    background_signal, carbon_signal, default_signals,
+    TraceSignal, as_trace, background_signal, carbon_signal, default_signals,
+    is_periodic_24h, sample_signal,
     # time structure + models
     BANDS, TimeBands, GridCarbonModel, MIDWEST_HOURLY, DTE_FACTOR,
     ChipProfile, EnergyModel, MachineProfile, StepCost,
-    # sweep engine
+    # sweep engines (periodic 24-slot; the trace-grid scan's trace_sweep
+    # is re-exported lazily below so importing carina stays jax-free)
     SweepCase, frontier_from_sweep, hourly_profile, sweep,
     # execution + tracking
     CarinaController, IntensityDecision, SimClock, RunTracker, RunSummary,
@@ -39,3 +42,10 @@ from repro.core import (  # noqa: F401
     # reporting
     render_frontier_dashboard, render_run_dashboard,
 )
+
+
+def __getattr__(name):
+    if name == "trace_sweep":            # lazy: avoids eager jax import
+        from repro.core.engine_jax import trace_sweep
+        return trace_sweep
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

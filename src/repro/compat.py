@@ -5,10 +5,26 @@ and renamed its replication-check kwarg (`check_rep` -> `check_vma`).
 Import it from here with the new-style `check_vma` spelling and it works
 on both sides of the move.  `axis_size` appeared in jax.lax later than
 `axis_index`; the fallback is the standard psum-of-ones identity.
+`enable_x64` is the double-precision context manager from
+jax.experimental, re-implemented over the config flag where absent.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+try:
+    from jax.experimental import enable_x64  # noqa: F401
+except ImportError:                           # pragma: no cover - new jax
+    @contextlib.contextmanager
+    def enable_x64(new_val: bool = True):
+        old = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", new_val)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", old)
 
 if hasattr(jax.lax, "axis_size"):
     axis_size = jax.lax.axis_size

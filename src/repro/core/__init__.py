@@ -11,6 +11,7 @@ from repro.core.dashboard import render_frontier_dashboard, render_run_dashboard
 from repro.core.energy import (ChipProfile, EnergyModel, MachineProfile,  # noqa: F401
                                StepCost)
 from repro.core.engine import SweepCase, frontier_from_sweep, hourly_profile, sweep  # noqa: F401
+from repro.core.model import Rates, campaign_rates, power_w, rates  # noqa: F401
 from repro.core.policy import (BANDS, BASELINE, LARGE_BATCHES,  # noqa: F401
                                LOW_PRIORITY_ONLY, PEAK_AWARE_AGGRESSIVE,
                                PEAK_AWARE_BOOSTED, POLICIES, SMALL_BATCHES,
@@ -18,13 +19,16 @@ from repro.core.policy import (BANDS, BASELINE, LARGE_BATCHES,  # noqa: F401
                                constant_schedule, hourly_schedule,
                                make_carbon_aware_policy,
                                make_carbon_weighted_boosted)
-from repro.core.schedule import (Decision, FunctionSchedule, Schedule,  # noqa: F401
-                                 SchedulingContext, as_schedule)
+from repro.core.schedule import (DeadlineSchedule, Decision,  # noqa: F401
+                                 FunctionSchedule, Schedule,
+                                 SchedulingContext, as_schedule,
+                                 deadline_schedule, progress_ramp_schedule)
 from repro.core.session import Campaign, CampaignReport  # noqa: F401
 from repro.core.signal import (TOU_PRICE, BandSignal, ConstantSignal,  # noqa: F401
-                               HourlySignal, Signal, SignalSet,
-                               background_signal, carbon_signal,
-                               default_signals)
+                               HourlySignal, Signal, SignalSet, TraceSignal,
+                               as_trace, background_signal, carbon_signal,
+                               default_signals, is_periodic_24h,
+                               sample_signal)
 from repro.core.simulator import (SimResult, calibrate_workload,  # noqa: F401
                                   fill_deltas, policy_frontier,
                                   simulate_campaign, simulate_campaign_exact)
@@ -32,3 +36,14 @@ from repro.core.tracker import (RunSummary, RunTracker, UnitRecord,  # noqa: F40
                                 load_units, merge_summaries,
                                 summary_from_units)
 from repro.core.workload import OEM_CASE_1, OEM_CASE_2, OEMWorkload, TrainingCampaign  # noqa: F401
+
+
+def __getattr__(name):
+    # `trace_sweep` is resolved lazily (PEP 562): core/engine_jax.py
+    # attempts a module-level jax import, and eager re-export here would
+    # make every `import repro.core` pay jax startup even on pure-NumPy
+    # paths.  engine.sweep() likewise imports the trace engine on demand.
+    if name == "trace_sweep":
+        from repro.core.engine_jax import trace_sweep
+        return trace_sweep
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

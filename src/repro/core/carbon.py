@@ -12,6 +12,7 @@ default).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence
 
 # kg CO2e per kWh, implied by the paper's OEM case studies (DTE, Detroit)
@@ -27,7 +28,7 @@ class GridCarbonModel:
     def factor_at(self, hour_of_day: float) -> float:
         if self.hourly_curve is None:
             return self.factor_kg_per_kwh
-        h = int(hour_of_day) % 24
+        h = math.floor(hour_of_day) % 24   # floor: int() truncates negatives
         return self.factor_kg_per_kwh * self.hourly_curve[h]
 
     def co2_kg(self, kwh: float, hour_of_day: Optional[float] = None) -> float:

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
+from repro.core import model
+
 # ---------------------------------------------------------------------------
 # TPU v5e-class hardware constants (assignment-specified)
 PEAK_FLOPS_BF16 = 197e12          # per chip
@@ -70,10 +72,10 @@ class MachineProfile:
     overhead_w_frac: float = 0.35   # power fraction of dyn during batch overhead
 
     def power(self, u: float, b: float = 0.0) -> float:
-        return self.idle_w + self.dyn_w * max(u + b, 0.0) ** self.alpha
+        return model.power_w(u + b, self.idle_w, self.dyn_w, self.alpha)
 
     def background_power(self, b: float) -> float:
-        return self.idle_w + self.dyn_w * max(b, 0.0) ** self.alpha
+        return model.power_w(b, self.idle_w, self.dyn_w, self.alpha)
 
 
 # ---------------------------------------------------------------------------

@@ -1,109 +1,122 @@
 """Vectorized sweep engine: evaluate many (schedule x workload x grid-curve)
-combinations in one batched NumPy pass.
+combinations in one batched pass, dispatching each case to the cheapest
+representation that is exact for it.
 
-The sequential simulators walk a campaign segment by segment in Python;
-fine for six policies, too slow for the ROADMAP goal of sweeping "as many
-scenarios as you can imagine".  This engine exploits the structure every
-bundled schedule and signal share: decisions and signals are periodic over
-24 h and piecewise-constant per hour (band edges fall on integer hours).
-A campaign is then a periodic piecewise-linear accumulation of scenarios,
-energy, CO2e and cost, so for S cases we can:
+Two vectorized paths sit behind one `sweep()` entry point:
 
-  1. sample each case's schedule/signals onto a 24-slot hourly grid
-     (S x 24 arrays of intensity, batch, background, carbon, price);
-  2. derive per-slot scenario/energy/CO2e/cost *rates* with closed-form
-     NumPy expressions (same contention + convex-power model as the
-     sequential simulator);
-  3. jump over whole days with integer arithmetic and resolve the final
-     partial day with one cumulative-sum search — no per-segment loop.
+  * the **periodic 24-slot path** (this module): decisions and signals
+    that are periodic over 24 h and piecewise-constant per hour collapse a
+    campaign into a periodic piecewise-linear accumulation — sample each
+    case onto a 24-slot grid, derive per-slot rates with the shared rate
+    model (core/model.py), jump whole days with integer arithmetic, and
+    resolve the final partial day with one cumulative-sum search;
 
-Agreement with the per-batch oracle `simulate_campaign_exact` is pinned to
-<0.5 % by tests/test_session_engine.py (the same tolerance the coarse
-sequential path is held to); against the coarse sequential path the engine
-agrees to float precision (both integrate the same piecewise-hourly
-model).  Schedules that vary within an
-hour are not representable on the hourly grid, nor are schedules that
-consult the progress/elapsed_h context fields (the grid is sampled once
-with both at zero) — use the sequential simulators for those.
+  * the **trace-grid path** (core/engine_jax.py): anything the periodic
+    grid cannot represent — progress/elapsed-aware schedules, non-periodic
+    multi-day `TraceSignal`s, sub-hour band edges — is stepped hour by
+    hour with a jit-compiled `jax.lax.scan` (NumPy fallback) that carries
+    `(remaining, elapsed)` state.
+
+`sweep()` classifies every case and routes it; the per-case probe that
+used to *reject* progress-aware schedules with a ValueError now simply
+sends them down the trace-grid path.  Agreement with the per-batch oracle
+`simulate_campaign_exact` is pinned to <0.5 % for both paths by
+tests/test_session_engine.py and tests/test_trace_engine.py; against the
+coarse sequential path the periodic engine agrees to float precision
+(both integrate the same piecewise-hourly model).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import functools
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import model
 from repro.core.carbon import GridCarbonModel
 from repro.core.energy import MachineProfile
 from repro.core.policy import TimeBands
 from repro.core.schedule import Schedule, SchedulingContext, as_schedule
-from repro.core.signal import Signal, sample_hourly
+from repro.core.signal import Signal, is_periodic_24h, sample_hourly
 from repro.core.simulator import SimResult, fill_deltas
 from repro.core.workload import OEMWorkload
+
+# Memo caches below are bounded (long-running sweep services construct
+# unbounded numbers of TimeBands/carbon variants; the old module-level
+# dicts grew forever).
+_CACHE_SIZE = 256
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepCase:
-    """One point of a sweep: a schedule run against one scenario setup."""
+    """One point of a sweep: a schedule run against one scenario setup.
+
+    `carbon` may be a GridCarbonModel or any carbon Signal (a non-periodic
+    `TraceSignal` routes the case to the trace-grid engine).  A non-zero
+    `deadline_h` is surfaced to the schedule via `ctx.deadline_h`.
+    """
     schedule: Schedule
     workload: OEMWorkload
     machine: MachineProfile = MachineProfile()
     bands: TimeBands = TimeBands()
-    carbon: Optional[GridCarbonModel] = None
+    carbon: Optional[object] = None
     start_hour: float = 9.0
     label: str = ""
+    deadline_h: float = 0.0
 
     def name(self) -> str:
         return self.label or as_schedule(self.schedule).name
 
 
+@functools.lru_cache(maxsize=_CACHE_SIZE)
 def _band_table(bands: TimeBands):
     """(band_name[24], background[24]) for one TimeBands, memoized — band
     lookups are the hot part of profile sampling in large sweeps."""
-    key = bands  # frozen dataclass -> hashable
-    hit = _band_table.cache.get(key)
-    if hit is None:
-        if any(float(e) % 1.0 for e in bands.edges()):
-            raise ValueError(
-                "the vectorized engine samples bands on the hourly grid and "
-                "cannot represent sub-hour band edges; use the sequential "
-                "simulators for these TimeBands")
-        names = [bands.band_at(float(h)) for h in range(24)]
-        hit = (names, np.array([bands.background(b) for b in names]))
-        _band_table.cache[key] = hit
-    return hit
+    if any(float(e) % 1.0 for e in bands.edges()):
+        raise ValueError(
+            "the periodic engine samples bands on the hourly grid and "
+            "cannot represent sub-hour band edges; sweep() routes such "
+            "cases to the trace-grid engine")
+    names = [bands.band_at(float(h)) for h in range(24)]
+    return (names, np.array([bands.background(b) for b in names]))
 
 
-_band_table.cache = {}
+@functools.lru_cache(maxsize=_CACHE_SIZE)
+def _carbon_table_cached(carbon) -> np.ndarray:
+    return np.array(sample_hourly(carbon))
 
 
-def _carbon_table(carbon: GridCarbonModel) -> np.ndarray:
+def _carbon_table(carbon) -> np.ndarray:
     try:
-        hit = _carbon_table.cache.get(carbon)
+        return _carbon_table_cached(carbon)
     except TypeError:                       # unhashable hourly_curve (list)
         return np.array(sample_hourly(carbon))
-    if hit is None:
-        hit = np.array(sample_hourly(carbon))
-        _carbon_table.cache[carbon] = hit
-    return hit
 
 
-_carbon_table.cache = {}
+def slots_per_hour(bands: TimeBands) -> int:
+    """Smallest sub-hour grid resolution that aligns every band edge.
 
-
-def hourly_profile(schedule, bands: TimeBands, carbon: GridCarbonModel,
-                   price: Optional[Signal] = None):
-    """Sample a schedule's decisions on the 24-hour grid.
-
-    Returns (intensity[24], batch[24]).  Exact for any schedule whose
-    decision is constant within each local hour (all bundled ones are).
-    The bundled Policy/HourlyPolicy classes take a closed-form path; any
-    schedule with its own decide() is sampled through the full context.
+    1 for integral edges; e.g. 2 for half-hour edges.  Raises for edges
+    finer than one minute (not representable on any reasonable grid).
     """
+    for k in (1, 2, 3, 4, 5, 6, 10, 12, 15, 20, 30, 60):
+        if all(abs(float(e) * k - round(float(e) * k)) < 1e-9
+               for e in bands.edges()):
+            return k
+    raise ValueError(
+        "band edges finer than one minute cannot be aligned to a "
+        "simulation grid; use the sequential simulators")
+
+
+def periodic_decision_profile(schedule, bands: TimeBands
+                              ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Closed-form (intensity[24], batch[24]) for the bundled Policy /
+    HourlyPolicy classes, which are periodic and progress-free by
+    construction; None for anything that needs decide() sampling."""
     from repro.core.policy import HourlyPolicy, Policy
 
     sched = as_schedule(schedule)
-    band_names, bg24 = _band_table(bands)
     decide = type(sched).decide if isinstance(sched, Policy) else None
     if decide is HourlyPolicy.decide and sched.hourly_intensity:
         u = np.array(sched.hourly_intensity, dtype=float)
@@ -111,10 +124,28 @@ def hourly_profile(schedule, bands: TimeBands, carbon: GridCarbonModel,
             u = u * 0.82
         return u, np.full(24, float(sched.batch_size))
     if decide in (Policy.decide, HourlyPolicy.decide):
+        band_names, _ = _band_table(bands)
         per_band = {b: sched.intensity_at(b) for b in set(band_names)}
         u = np.array([per_band[b] for b in band_names])
         return u, np.full(24, float(sched.batch_size))
+    return None
 
+
+def _try_hourly_profile(schedule, bands: TimeBands, carbon,
+                        price: Optional[Signal] = None,
+                        deadline_h: float = 0.0
+                        ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Sample a schedule's decisions on the 24-hour grid, or None when the
+    schedule consults progress/elapsed_h (the periodic grid is sampled
+    once per hour-of-day and reused for every simulated day, so such
+    schedules are not representable — the dispatcher sends them to the
+    trace-grid engine instead)."""
+    closed = periodic_decision_profile(schedule, bands)
+    if closed is not None:
+        return closed
+
+    sched = as_schedule(schedule)
+    band_names, bg24 = _band_table(bands)
     cf24 = _carbon_table(carbon)
     pr24 = ([price.at(float(h)) for h in range(24)] if price is not None
             else None)
@@ -124,30 +155,108 @@ def hourly_profile(schedule, bands: TimeBands, carbon: GridCarbonModel,
         ctx = SchedulingContext(
             hour_of_day=float(h), band=band_names[h],
             background=float(bg24[h]), carbon_factor=float(cf24[h]),
-            price_usd_per_kwh=pr24[h] if pr24 is not None else 0.0)
+            price_usd_per_kwh=pr24[h] if pr24 is not None else 0.0,
+            deadline_h=deadline_h)
         d = sched.decide(ctx)
-        # the grid is sampled once per hour-of-day and reused for every
-        # simulated day, so a schedule that consults progress/elapsed_h is
-        # not representable — probe at a different campaign position and
-        # refuse rather than return silently wrong sweep numbers
-        d_late = sched.decide(dataclasses.replace(
-            ctx, elapsed_h=24.0 + h, progress=0.5))
-        if (d_late.intensity, d_late.batch_size) != (d.intensity,
-                                                     d.batch_size):
-            raise ValueError(
-                f"schedule {sched.name!r} varies with campaign progress/"
-                "elapsed time; the vectorized engine's periodic hourly grid "
-                "cannot represent it — use the sequential simulators")
+        # probe at other campaign positions: a schedule that consults
+        # progress/elapsed_h decides differently somewhere and needs the
+        # trace-grid engine's (hour, progress-bucket) decision tables.
+        # Several (elapsed, progress) pairs, spanning behind-schedule and
+        # ahead-of-schedule states, so pace-style controllers whose
+        # decision happens to coincide at one probe point are still caught.
+        for elapsed, progress in ((24.0 + h, 0.5), (720.0 + h, 0.02),
+                                  (float(h), 0.98), (240.0 + h, 0.999)):
+            d_probe = sched.decide(dataclasses.replace(
+                ctx, elapsed_h=elapsed, progress=progress))
+            if (d_probe.intensity, d_probe.batch_size) != (d.intensity,
+                                                           d.batch_size):
+                return None
         u[h] = d.intensity
         batch[h] = d.batch_size
     return u, batch
 
 
+def hourly_profile(schedule, bands: TimeBands, carbon: GridCarbonModel,
+                   price: Optional[Signal] = None):
+    """Sample a schedule's decisions on the 24-hour grid.
+
+    Returns (intensity[24], batch[24]).  Exact for any schedule whose
+    decision is constant within each local hour (all bundled ones are).
+    Raises for progress/elapsed-aware schedules — `sweep()` handles those
+    transparently via the trace-grid engine; call that instead.
+    """
+    prof = _try_hourly_profile(schedule, bands, carbon, price)
+    if prof is None:
+        raise ValueError(
+            f"schedule {as_schedule(schedule).name!r} varies with campaign "
+            "progress/elapsed time; the periodic hourly grid cannot "
+            "represent it — sweep() routes such schedules to the "
+            "trace-grid engine automatically")
+    return prof
+
+
+def _case_is_periodic(case: SweepCase, price: Optional[Signal]) -> bool:
+    """Cheap structural checks for the periodic 24-slot representation
+    (the schedule's own probe happens later, in profile sampling)."""
+    carbon = case.carbon or GridCarbonModel()
+    if not is_periodic_24h(carbon):
+        return False
+    if price is not None and not is_periodic_24h(price):
+        return False
+    return slots_per_hour(case.bands) == 1
+
+
 def sweep(cases: Sequence[SweepCase],
-          price: Optional[Signal] = None) -> List[SimResult]:
-    """Evaluate all cases in one vectorized pass; order is preserved."""
+          price: Optional[Signal] = None,
+          progress_buckets: int = 32,
+          backend: Optional[str] = None) -> List[SimResult]:
+    """Evaluate all cases in vectorized passes; order is preserved.
+
+    Each case is dispatched to the periodic 24-slot path when its
+    schedule, bands, and signals are all 24 h-periodic and hour-aligned,
+    and to the trace-grid scan engine (core/engine_jax.py) otherwise —
+    progress/elapsed-aware schedules, `TraceSignal` carbon/price, and
+    sub-hour band edges all take the trace path instead of raising.
+
+    `progress_buckets` and `backend` ("jax"/"numpy") tune the trace path.
+    """
     if not len(cases):
         return []
+    periodic_idx: List[int] = []
+    trace_idx: List[int] = []
+    profiles = {}
+    for i, c in enumerate(cases):
+        prof = (_try_hourly_profile(c.schedule, c.bands,
+                                    c.carbon or GridCarbonModel(), price,
+                                    c.deadline_h)
+                if _case_is_periodic(c, price) else None)
+        if prof is None:
+            trace_idx.append(i)
+        else:
+            periodic_idx.append(i)
+            profiles[i] = prof
+
+    out: List[Optional[SimResult]] = [None] * len(cases)
+    if periodic_idx:
+        res = _sweep_periodic([cases[i] for i in periodic_idx], price,
+                              [profiles[i] for i in periodic_idx])
+        for i, r in zip(periodic_idx, res):
+            out[i] = r
+    if trace_idx:
+        from repro.core.engine_jax import trace_sweep
+        sub = [cases[i] for i in trace_idx]
+        sph = max(slots_per_hour(c.bands) for c in sub)
+        res = trace_sweep(sub, price=price, slots_per_hour=sph,
+                          progress_buckets=progress_buckets, backend=backend)
+        for i, r in zip(trace_idx, res):
+            out[i] = r
+    return out  # type: ignore[return-value]
+
+
+def _sweep_periodic(cases: Sequence[SweepCase], price: Optional[Signal],
+                    profiles: Sequence[Tuple[np.ndarray, np.ndarray]]
+                    ) -> List[SimResult]:
+    """The periodic 24-slot path: one batched NumPy pass over all cases."""
     S = len(cases)
     u = np.empty((S, 24))
     batch = np.empty((S, 24))
@@ -168,7 +277,7 @@ def sweep(cases: Sequence[SweepCase],
             if price is not None else None)
     for i, c in enumerate(cases):
         carbon = c.carbon or GridCarbonModel()
-        u[i], batch[i] = hourly_profile(c.schedule, c.bands, carbon, price)
+        u[i], batch[i] = profiles[i]
         bg[i] = _band_table(c.bands)[1]
         cf[i] = _carbon_table(carbon)
         if pr24 is not None:
@@ -181,17 +290,14 @@ def sweep(cases: Sequence[SweepCase],
         gamma[i], ohfrac[i] = m.gamma, m.overhead_w_frac
         start[i] = c.start_hour
 
-    # ---- per-slot rates (same model as the sequential simulator) ----------
-    r_eff = rate[:, None] * u * np.maximum(1.0 - gamma[:, None] * bg, 0.05)
-    work_t = batch / np.maximum(r_eff, 1e-9)          # work seconds per batch
-    batch_time = oh_s[:, None] + work_t
-    scen_rate = batch / batch_time                    # scenarios per second
-    work_frac = work_t / batch_time
-    p_work = idle[:, None] + dyn[:, None] * np.maximum(u + bg, 0.0) ** alpha[:, None]
-    p_oh = idle[:, None] + dyn[:, None] * \
-        np.maximum(ohfrac[:, None] * u + bg, 0.0) ** alpha[:, None]
-    p_avg = work_frac * p_work + (1.0 - work_frac) * p_oh
-    kwh_rate = p_avg / 3.6e6                          # kWh per second
+    # ---- per-slot rates (the shared rate model, batched over (S, 24)) -----
+    r = model.rates(u, batch, bg,
+                    rate_at_full=rate[:, None], batch_overhead_s=oh_s[:, None],
+                    idle_w=idle[:, None], dyn_w=dyn[:, None],
+                    alpha=alpha[:, None], gamma=gamma[:, None],
+                    overhead_w_frac=ohfrac[:, None], xp=np)
+    scen_rate = r.scen_per_s                          # scenarios per second
+    kwh_rate = r.kwh_per_s                            # kWh per second
     co2_rate = kwh_rate * cf
     cost_rate = kwh_rate * pr
 

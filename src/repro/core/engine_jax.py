@@ -1,0 +1,432 @@
+"""Trace-grid sweep engine: a jit-compiled `jax.lax.scan` over a fine
+hourly time grid, vmapped across cases as batched (S,)-vectors.
+
+The periodic 24-slot engine (core/engine.py) collapses a campaign into
+one repeated day, which is exact only when every decision and signal is
+24 h-periodic and ignorant of campaign position.  This engine instead
+*steps* the campaign hour by hour (or finer, for sub-hour band edges),
+carrying `(remaining, elapsed)` state through the scan, so it natively
+represents everything the periodic grid cannot:
+
+  * progress/elapsed-aware schedules (deadline pace-keepers, progress
+    ramps) via a precompiled per-case decision table over
+    (hour-row, progress-bucket) — the scan picks the row by grid position
+    and the bucket by live progress;
+  * non-periodic multi-day signals (`TraceSignal` grid-carbon forecasts,
+    trace prices) sampled per slot;
+  * heterogeneous fleets: per-case machines, workloads, bands and
+    `start_hour`s batch into the same scan.
+
+Decision tables stay compact: schedules whose decisions are detected (by
+probing) to be hour-of-day-periodic keep 24*sph rows indexed modulo the
+day; progress-free schedules keep a single bucket.  Physics per slot
+comes from the shared rate model (core/model.py) with `xp=jnp`.
+
+JAX is optional: with `backend="numpy"` (or when JAX is absent, following
+the repro/compat.py guard pattern) the identical scan runs as a NumPy
+loop over the grid — still vectorized across cases, just not jitted.
+JAX runs under `enable_x64` so both backends agree to float64 precision
+with the periodic engine on periodic cases.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import model
+from repro.core.carbon import GridCarbonModel
+from repro.core.schedule import SchedulingContext, as_schedule
+from repro.core.signal import Signal, carbon_signal, sample_signal
+from repro.core.simulator import SimResult
+
+try:                                    # JAX is optional on the trace path
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compat import enable_x64
+    _HAS_JAX = True
+except Exception:                       # pragma: no cover - env without jax
+    jax = jnp = enable_x64 = None
+    _HAS_JAX = False
+
+_PROBE_PROGRESS = (0.0, 1.0 / 3.0, 2.0 / 3.0, 0.999)
+_PROBE_OFFSETS = (0.0, 3.0, 5.0, 9.0, 13.0, 17.0, 21.0)
+
+
+@functools.lru_cache(maxsize=256)       # bounded, same policy as engine.py
+def _bg_table(bands, sph: int) -> np.ndarray:
+    """Background load per grid row over one day ((24*sph,), memoized)."""
+    return np.array([bands.background(bands.band_at(r / sph))
+                     for r in range(24 * sph)])
+
+
+def _ctx_factory(case, carbon_sig, price_sig):
+    """ctx(t_abs, progress) for probing and decision-table sampling,
+    built exactly like the sequential simulators build theirs."""
+    bands = case.bands
+    start = case.start_hour
+
+    def make(t_abs: float, progress: float) -> SchedulingContext:
+        hod = t_abs % 24.0
+        band = bands.band_at(hod)
+        return SchedulingContext(
+            hour_of_day=hod, band=band, background=bands.background(band),
+            carbon_factor=float(carbon_sig.at(t_abs)),
+            price_usd_per_kwh=(float(price_sig.at(t_abs))
+                               if price_sig is not None else 0.0),
+            elapsed_h=max(t_abs - start, 0.0), progress=progress,
+            deadline_h=case.deadline_h)
+
+    return make
+
+
+def _probe(sched, make_ctx, g0: float, horizon_h: float):
+    """(progress_dep, elapsed_dep, decision_samples) from a coarse lattice.
+
+    `elapsed_dep` is true when the same hour-of-day decides differently on
+    different days (a deadline pace, or a schedule following a non-periodic
+    carbon trace through ctx.carbon_factor); `progress_dep` when decisions
+    move with ctx.progress.  Exact for the bundled schedule families;
+    arbitrary callables are sampled on the lattice (documented heuristic —
+    a schedule varying only between lattice points can be misclassified).
+    """
+    days = sorted({0.0, 24.0, 48.0,
+                   max(math.floor(horizon_h / 48.0) * 24.0, 0.0),
+                   max((math.floor(horizon_h / 24.0) - 1) * 24.0, 0.0)})
+    progress_dep = elapsed_dep = False
+    samples = []
+    for off in _PROBE_OFFSETS:
+        base = None
+        for day_h in days:
+            t_abs = g0 + day_h + off
+            if t_abs - g0 > horizon_h + 24.0:
+                continue
+            d0 = sched.decide(make_ctx(t_abs, 0.5))
+            key0 = (d0.intensity, d0.batch_size)
+            samples.append((t_abs, d0.intensity, d0.batch_size))
+            if base is None:
+                base = key0
+            elif key0 != base:
+                elapsed_dep = True
+            for p in _PROBE_PROGRESS:
+                dp = sched.decide(make_ctx(t_abs, p))
+                if (dp.intensity, dp.batch_size) != key0:
+                    progress_dep = True
+                    samples.append((t_abs, dp.intensity, dp.batch_size))
+    return progress_dep, elapsed_dep, samples
+
+
+def _table_depends_on_t(sched, prof, probe) -> bool:
+    """True when the case's decision table has T rows (and so must be
+    rebuilt if the retry loop grows the horizon)."""
+    if prof is not None:
+        return False
+    if hasattr(sched, "decide_grid"):
+        return True
+    return probe[1]                      # elapsed_dep
+
+
+def _case_tables(case, carbon_sig, price_sig, sph: int, T: int, B: int,
+                 prof, probe) -> Tuple[np.ndarray, np.ndarray, bool]:
+    """Decision table (u_rows, batch_rows) of shape (R, B_i) plus a flag:
+    periodic tables have R = 24*sph rows indexed modulo the day; full
+    tables have R = T rows indexed by grid slot.  `prof` (closed-form
+    24 h profile or None) and `probe` (dependence classification) are
+    computed once per case by the caller — probing costs ~10^2 decide()
+    calls and must not repeat per retry."""
+    sched = as_schedule(case.schedule)
+    H = 24 * sph
+    if prof is not None:                 # bundled Policy/HourlyPolicy
+        u24, b24 = prof
+        return (np.repeat(u24, sph)[:, None].astype(float),
+                np.repeat(b24, sph)[:, None].astype(float), True)
+
+    g0 = math.floor(case.start_hour * sph) / sph
+    if hasattr(sched, "decide_grid"):
+        # vectorized decision protocol: the whole (T, B) table in one call
+        t_abs = g0 + np.arange(T) / sph
+        s0 = int(round(g0 * sph)) % H
+        centers = (np.arange(B) + 0.5) / B
+        ctx = SchedulingContext(
+            hour_of_day=t_abs[:, None] % 24.0, band="",
+            background=_bg_table(case.bands, sph)[
+                (s0 + np.arange(T)) % H][:, None],
+            carbon_factor=sample_signal(carbon_sig, t_abs)[:, None],
+            price_usd_per_kwh=(sample_signal(price_sig, t_abs)[:, None]
+                               if price_sig is not None else 0.0),
+            elapsed_h=np.maximum(t_abs - case.start_hour, 0.0)[:, None],
+            progress=centers[None, :], deadline_h=case.deadline_h)
+        u, b = sched.decide_grid(ctx)
+        return (np.broadcast_to(np.asarray(u, dtype=float), (T, B)).copy(),
+                np.broadcast_to(np.asarray(b, dtype=float), (T, B)).copy(),
+                False)
+
+    make_ctx = _ctx_factory(case, carbon_sig, price_sig)
+    progress_dep, elapsed_dep, _ = probe
+    B_i = B if progress_dep else 1
+    if elapsed_dep:
+        rows = T
+        t_abs = g0 + np.arange(T) / sph
+    else:
+        rows = H
+        hod = np.arange(H) / sph
+        t_abs = g0 + ((hod - g0) % 24.0)   # first occurrence of each row
+    u_rows = np.empty((rows, B_i))
+    b_rows = np.empty((rows, B_i))
+    for ri in range(rows):
+        t = float(t_abs[ri])
+        for bi in range(B_i):
+            p = (bi + 0.5) / B_i if progress_dep else 0.0
+            d = sched.decide(make_ctx(t, p))
+            u_rows[ri, bi] = d.intensity
+            b_rows[ri, bi] = d.batch_size
+    return u_rows, b_rows, not elapsed_dep
+
+
+def _estimate_hours(case, prof, probe, max_hours: float) -> float:
+    """Campaign-duration estimate sizing the scan grid.
+
+    Near-exact for periodic progress-free tables (one day's throughput is
+    computable up front); conservative — slowest sampled decision — for
+    decide()-probed schedules.  The scan retries with a doubled horizon
+    if it undershoots."""
+    sched = as_schedule(case.schedule)
+    bg24 = _bg_table(case.bands, 1)
+    if prof is not None:
+        u24, b24 = prof
+        r = model.campaign_rates(np.asarray(u24), np.asarray(b24), bg24,
+                                 case.workload, case.machine, xp=np)
+        day_scen = float(r.scen_per_s.sum()) * 3600.0
+        if day_scen <= 0.0:
+            return max_hours
+        dur = case.workload.n_scenarios / day_scen * 24.0
+        return min(dur * 1.02 + 28.0, max_hours)
+    samples = probe[2]
+    u = np.array([s[1] for s in samples])
+    b = np.array([s[2] for s in samples])
+    bg = bg24[np.floor([s[0] % 24.0 for s in samples]).astype(int)]
+    rs = model.campaign_rates(u, b, bg, case.workload, case.machine,
+                              xp=np).scen_per_s
+    floor = rs[rs > 0.02 * rs.max()] if rs.size else rs
+    if not floor.size:
+        return max_hours
+    if hasattr(sched, "decide_grid"):
+        # vectorized tables are cheap to rebuild, so start from the mean
+        # sampled rate (a feedback controller like the deadline keeper
+        # mixes its extremes) and let the retry loop double on undershoot
+        dur = case.workload.n_scenarios / (float(floor.mean()) * 3600.0)
+        return min(dur * 1.25 + 26.0, max_hours)
+    dur = case.workload.n_scenarios / (float(floor.min()) * 3600.0)
+    return min(dur * 1.15 + 26.0, max_hours)
+
+
+# ---------------------------------------------------------------------------
+# The scan itself, in both backends.  State: (remaining, runtime_s, kwh,
+# co2, cost); per-slot inputs: decision-table row index, background,
+# carbon factor, price, slot length.
+# ---------------------------------------------------------------------------
+def _bucket_lookup(xp, u_tab, b_tab, sidx, row, prog, B):
+    """Decision at live progress: linear interpolation between the two
+    nearest bucket centers (tables are sampled at centers (b+0.5)/B), so
+    smooth progress-aware schedules see no quantization bias."""
+    if B == 1:
+        return u_tab[sidx, row, 0], b_tab[sidx, row, 0]
+    x = prog * B - 0.5
+    b0 = xp.clip(xp.floor(x), 0, B - 2).astype("int32")
+    w = xp.clip(x - b0, 0.0, 1.0)
+    u = (1.0 - w) * u_tab[sidx, row, b0] + w * u_tab[sidx, row, b0 + 1]
+    bt = (1.0 - w) * b_tab[sidx, row, b0] + w * b_tab[sidx, row, b0 + 1]
+    return u, bt
+
+
+def _scan_step_np(state, u_tab, b_tab, row, bg, cf, pr, ln, params, B):
+    remaining, rt, kwh, co2, cost = state
+    (n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac, sidx) = params
+    prog = 1.0 - remaining / n_scen
+    u, bt = _bucket_lookup(np, u_tab, b_tab, sidx, row, prog, B)
+    r = model.rates(u, bt, bg, rate_at_full=rate, batch_overhead_s=oh,
+                    idle_w=idle, dyn_w=dyn, alpha=alpha, gamma=gamma,
+                    overhead_w_frac=ohfrac, xp=np)
+    dt = np.where(remaining > 0.0,
+                  np.minimum(ln, remaining / np.maximum(r.scen_per_s, 1e-30)),
+                  0.0)
+    e = r.kwh_per_s * dt
+    return (remaining - r.scen_per_s * dt, rt + dt, kwh + e,
+            co2 + e * cf, cost + e * pr)
+
+
+def _scan_np(u_tab, b_tab, rowidx, bg, cf, pr, lens, n_scen, rate, oh,
+             idle, dyn, alpha, gamma, ohfrac, B: int):
+    S, T = rowidx.shape
+    params = (n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac,
+              np.arange(S))
+    state = (n_scen.copy(), np.zeros(S), np.zeros(S), np.zeros(S),
+             np.zeros(S))
+    for t in range(T):
+        if not (state[0] > 0.0).any():
+            break
+        state = _scan_step_np(state, u_tab, b_tab, rowidx[:, t], bg[:, t],
+                              cf[:, t], pr[:, t], lens[:, t], params, B)
+    return state
+
+
+if _HAS_JAX:
+    @functools.partial(jax.jit, static_argnames=("B",))
+    def _scan_jax(u_tab, b_tab, rowidx, bg, cf, pr, lens, n_scen, rate, oh,
+                  idle, dyn, alpha, gamma, ohfrac, B: int):
+        S = u_tab.shape[0]
+        sidx = jnp.arange(S)
+
+        def step(carry, xs):
+            remaining, rt, kwh, co2, cost = carry
+            row, bg_t, cf_t, pr_t, ln = xs
+            prog = 1.0 - remaining / n_scen
+            u, bt = _bucket_lookup(jnp, u_tab, b_tab, sidx, row, prog, B)
+            r = model.rates(u, bt, bg_t, rate_at_full=rate,
+                            batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
+                            alpha=alpha, gamma=gamma, overhead_w_frac=ohfrac,
+                            xp=jnp)
+            dt = jnp.where(
+                remaining > 0.0,
+                jnp.minimum(ln, remaining / jnp.maximum(r.scen_per_s, 1e-30)),
+                0.0)
+            e = r.kwh_per_s * dt
+            carry = (remaining - r.scen_per_s * dt, rt + dt, kwh + e,
+                     co2 + e * cf_t, cost + e * pr_t)
+            return carry, None
+
+        zero = jnp.zeros(S)
+        init = (n_scen, zero, zero, zero, zero)
+        xs = (rowidx.T, bg.T, cf.T, pr.T, lens.T)
+        final, _ = jax.lax.scan(step, init, xs)
+        return final
+
+
+def _use_jax(backend: Optional[str]) -> bool:
+    if backend == "numpy":
+        return False
+    if backend == "jax":
+        if not _HAS_JAX:
+            raise RuntimeError("backend='jax' requested but jax is not "
+                               "importable")
+        return True
+    return _HAS_JAX
+
+
+def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
+                slots_per_hour: int = 1, progress_buckets: int = 32,
+                max_days: int = 120,
+                backend: Optional[str] = None) -> List[SimResult]:
+    """Evaluate cases on the trace grid; order is preserved.
+
+    Use `repro.core.engine.sweep` for mixed workloads — it keeps the
+    cheaper periodic path for cases that qualify and calls this for the
+    rest.  `progress_buckets` sets the progress resolution of decision
+    tables for progress-aware schedules (error scales ~1/buckets and is
+    pinned <0.5 % vs the per-batch oracle by tests/test_trace_engine.py).
+    """
+    if not len(cases):
+        return []
+    sph = int(slots_per_hour)
+    B = int(progress_buckets)
+    S = len(cases)
+    max_hours = float(max_days) * 24.0
+
+    carbon_sigs = [carbon_signal(c.carbon or GridCarbonModel())
+                   for c in cases]
+    n_scen = np.array([float(c.workload.n_scenarios) for c in cases])
+    rate = np.array([c.workload.rate_at_full for c in cases])
+    oh = np.array([c.workload.batch_overhead_s for c in cases])
+    idle = np.array([c.machine.idle_w for c in cases])
+    dyn = np.array([c.machine.dyn_w for c in cases])
+    alpha = np.array([c.machine.alpha for c in cases])
+    gamma = np.array([c.machine.gamma for c in cases])
+    ohfrac = np.array([c.machine.overhead_w_frac for c in cases])
+    start = np.array([c.start_hour for c in cases])
+    g0 = np.floor(start * sph) / sph
+    s0 = np.round(g0 * sph).astype(int) % (24 * sph)
+
+    # classify every case exactly once: closed-form profile, or a probe of
+    # its decide() over the coarse lattice (both feed the duration
+    # estimate AND the table builder — probing is ~10^2 Python calls per
+    # case, so it must not repeat per retry)
+    from repro.core.engine import periodic_decision_profile
+    scheds = [as_schedule(c.schedule) for c in cases]
+    profs = [periodic_decision_profile(s, c.bands)
+             for s, c in zip(scheds, cases)]
+    probes = [None if prof is not None else
+              _probe(scheds[i], _ctx_factory(cases[i], carbon_sigs[i],
+                                             price),
+                     float(g0[i]), max_hours)
+              for i, prof in enumerate(profs)]
+
+    est_h = max(_estimate_hours(c, prof, probe, max_hours)
+                for c, prof, probe in zip(cases, profs, probes))
+    T = int(math.ceil(min(est_h, max_hours) * sph))
+
+    tabs: List[Optional[Tuple[np.ndarray, np.ndarray, bool]]] = [None] * S
+    while True:
+        H = 24 * sph
+        slot = np.arange(T)
+        t_abs = g0[:, None] + slot[None, :] / sph                   # (S, T)
+        lens = np.full((S, T), 3600.0 / sph)
+        lens[:, 0] = (g0 + 1.0 / sph - start) * 3600.0
+
+        for i, c in enumerate(cases):
+            # T-dependent tables (decide_grid / elapsed-aware) must track
+            # the grown horizon; periodic ones are reused across retries
+            if tabs[i] is None or _table_depends_on_t(scheds[i], profs[i],
+                                                      probes[i]):
+                tabs[i] = _case_tables(c, carbon_sigs[i], price, sph, T, B,
+                                       profs[i], probes[i])
+        R = max(t[0].shape[0] for t in tabs)
+        Bg = max(t[0].shape[1] for t in tabs)
+        u_tab = np.zeros((S, R, Bg))
+        b_tab = np.ones((S, R, Bg))
+        rowidx = np.empty((S, T), dtype=np.int32)
+        bg = np.empty((S, T))
+        cf = np.empty((S, T))
+        pr = np.zeros((S, T))
+        for i, (c, (u_r, b_r, periodic)) in enumerate(zip(cases, tabs)):
+            rows = u_r.shape[0]
+            u_tab[i, :rows] = np.broadcast_to(u_r, (rows, Bg)) \
+                if u_r.shape[1] == 1 else u_r
+            b_tab[i, :rows] = np.broadcast_to(b_r, (rows, Bg)) \
+                if b_r.shape[1] == 1 else b_r
+            rowidx[i] = (s0[i] + slot) % H if periodic else slot
+            bg[i] = _bg_table(c.bands, sph)[(s0[i] + slot) % H]
+            cf[i] = sample_signal(carbon_sigs[i], t_abs[i])
+            if price is not None:
+                pr[i] = sample_signal(price, t_abs[i])
+
+        args = (u_tab, b_tab, rowidx, bg, cf, pr, lens, n_scen, rate, oh,
+                idle, dyn, alpha, gamma, ohfrac)
+        if _use_jax(backend):
+            with enable_x64():
+                final = _scan_jax(*(jnp.asarray(a) for a in args), B=Bg)
+            final = tuple(np.asarray(f) for f in final)
+        else:
+            final = _scan_np(*args, B=Bg)
+        remaining, runtime_s, kwh, co2, cost = final
+
+        if (remaining <= 1e-6 * n_scen).all():
+            break
+        if T >= int(max_hours * sph):
+            worst = int(np.argmax(remaining / n_scen))
+            raise RuntimeError(
+                f"case {cases[worst].name()!r} did not finish within "
+                f"max_days={max_days} on the trace grid (remaining "
+                f"{remaining[worst]:.0f} of {n_scen[worst]:.0f} scenarios); "
+                "its schedule may be stalled at zero intensity")
+        T = min(T * 2, int(max_hours * sph))
+
+    out = []
+    for i, c in enumerate(cases):
+        out.append(SimResult(
+            policy=c.name(), runtime_h=float(runtime_s[i]) / 3600.0,
+            energy_kwh=float(kwh[i]), co2_kg=float(co2[i]),
+            cost_usd=float(cost[i]) if price is not None else None))
+    return out

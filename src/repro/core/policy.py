@@ -7,6 +7,7 @@ maps intensity onto TPU-native knobs (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Tuple
 
 from repro.core.schedule import Decision, SchedulingContext
@@ -131,7 +132,7 @@ class HourlyPolicy(Policy):
     hourly_intensity: Tuple[float, ...] = ()      # len 24
 
     def intensity_at_hour(self, hour: float) -> float:
-        u = self.hourly_intensity[int(hour) % 24]
+        u = self.hourly_intensity[math.floor(hour) % 24]
         return u * 0.82 if self.low_priority else u
 
     # ---- Schedule protocol -------------------------------------------------

@@ -33,7 +33,7 @@ from repro.core.energy import ChipProfile, MachineProfile, StepCost
 from repro.core.engine import SweepCase, frontier_from_sweep, sweep
 from repro.core.policy import BASELINE, POLICIES, TimeBands
 from repro.core.schedule import Schedule, as_schedule
-from repro.core.signal import Signal, SignalSet, default_signals
+from repro.core.signal import Signal, SignalSet, as_trace, default_signals
 from repro.core.simulator import (SimResult, calibrate_workload, fill_deltas,
                                   simulate_campaign, simulate_campaign_exact)
 from repro.core.tracker import RunSummary, RunTracker
@@ -174,17 +174,32 @@ class Campaign:
         return out
 
     def sweep(self, schedules: Sequence, *,
-              carbons: Optional[Sequence[GridCarbonModel]] = None,
+              carbons: Optional[Sequence] = None,
               workloads: Optional[Sequence[OEMWorkload]] = None,
-              deltas: bool = False) -> List[SimResult]:
+              deltas: bool = False,
+              carbon_trace=None,
+              deadline_h: float = 0.0) -> List[SimResult]:
         """Vectorized (schedule x workload x grid-curve) sweep.
 
         Uses the calibrated machine/rate; hundreds of candidate schedules
-        evaluate in one NumPy pass (core/engine.py).  Order: the cartesian
-        product iterates schedules fastest, then carbons, then workloads.
-        Schedules that consult progress/elapsed_h are outside the engine's
-        periodic hourly-grid model — run those through run()/frontier().
+        evaluate in one batched pass (core/engine.py).  Order: the
+        cartesian product iterates schedules fastest, then carbons, then
+        workloads.  Cases representable on the periodic 24-slot grid take
+        the fast NumPy path; everything else — progress/elapsed-aware
+        schedules, trace signals — is routed to the trace-grid scan
+        engine (core/engine_jax.py) automatically.
+
+        `carbon_trace` accepts an hourly kg-CO2e/kWh sequence of any
+        length (e.g. a week-long forecast; hour 0 = midnight of day 0) or
+        a ready Signal, and replaces `carbons`.  A non-zero `deadline_h`
+        is surfaced to every schedule via `ctx.deadline_h`, so one
+        deadline-aware schedule can be swept against many deadlines.
         """
+        if carbon_trace is not None:
+            if carbons is not None:
+                raise ValueError("pass either carbons= or carbon_trace=, "
+                                 "not both")
+            carbons = [as_trace(carbon_trace, name="carbon-trace")]
         wl0, m = self.calibrated()
         cases = []
         for wl in (workloads if workloads is not None else [wl0]):
@@ -193,7 +208,8 @@ class Campaign:
             for carbon in (carbons if carbons is not None else [self.carbon]):
                 for s in schedules:
                     cases.append(SweepCase(as_schedule(s), wl, m, self.bands,
-                                           carbon, self.start_hour))
+                                           carbon, self.start_hour,
+                                           deadline_h=deadline_h))
         results = sweep(cases, price=self.price)
         return (frontier_from_sweep(results, base=self.baseline())
                 if deltas else results)

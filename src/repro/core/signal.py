@@ -1,32 +1,65 @@
 """Time-varying input signals (paper §2 instrumentation + stated future work).
 
-A Signal is any time-of-day-varying scalar input the scheduler or the
-simulator consumes: background office load, grid carbon intensity,
-electricity price.  The paper hard-wires the first two (band levels in
+A Signal is any time-varying scalar input the scheduler or the simulator
+consumes: background office load, grid carbon intensity, electricity
+price.  The paper hard-wires the first two (band levels in
 `TimeBands.background`, an hourly multiplier in `GridCarbonModel`); this
 module lifts them behind one interface so a live forecast feed — the
 paper's "continuously updated regional carbon-intensity feeds" — can later
 implement the same protocol without touching the simulator or the engine.
 
-All bundled signals are periodic over 24 h and piecewise-constant per hour
-(band boundaries fall on integer hours), which is what lets the vectorized
-sweep engine (core/engine.py) evaluate them as 24-vectors.
+Signals are sampled with *absolute* campaign hours (hour 0 = midnight of
+the campaign's first day).  Periodic signals wrap mod 24 internally, so
+hour-of-day and absolute-hour sampling agree for them; a `TraceSignal`
+(an arbitrary-length hourly series such as a week-long grid-carbon
+forecast) is genuinely non-periodic and is what routes a sweep onto the
+trace-grid engine (core/engine_jax.py) instead of the periodic 24-slot
+one (core/engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Protocol, Tuple, runtime_checkable
+import math
+from typing import Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
 
 
 @runtime_checkable
 class Signal(Protocol):
-    """A scalar input varying with local time-of-day."""
+    """A scalar input varying with time."""
 
     name: str
 
     def at(self, hour_of_day: float) -> float:
-        """Value at the given local hour (any float; wraps mod 24)."""
+        """Value at the given hour (absolute campaign hours; periodic
+        signals wrap mod 24, so hour-of-day works too)."""
         ...
+
+
+def period_hours(signal) -> Optional[float]:
+    """A signal's period in hours; None when unknown or non-periodic.
+
+    Signals may declare their own `period_h`; the bundled periodic
+    classes (ConstantSignal / HourlySignal / BandSignal, plus the
+    GridCarbonModel duck type) are known to repeat every 24 h.  Anything
+    else is conservatively treated as non-periodic — a custom live-feed
+    signal implementing only `at(hour)` must not be silently collapsed
+    onto one repeated day by the periodic sweep engine.
+    """
+    if hasattr(signal, "period_h"):
+        return signal.period_h
+    if isinstance(signal, (ConstantSignal, HourlySignal, BandSignal)):
+        return 24.0
+    if hasattr(signal, "factor_at"):      # GridCarbonModel duck type
+        return 24.0
+    return None
+
+
+def is_periodic_24h(signal) -> bool:
+    """True when the signal is known to repeat every 24 h (the periodic
+    sweep engine's representability condition)."""
+    return period_hours(signal) == 24.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,7 +84,9 @@ class HourlySignal:
                 f"HourlySignal needs exactly 24 values, got {len(self.values)}")
 
     def at(self, hour_of_day: float) -> float:
-        return self.values[int(hour_of_day) % 24]
+        # math.floor, not int(): int() truncates toward zero, mapping hour
+        # -0.5 to slot 0 instead of slot 23
+        return self.values[math.floor(hour_of_day) % 24]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +102,85 @@ class BandSignal:
 
     def at(self, hour_of_day: float) -> float:
         return self.levels[self.bands.band_at(hour_of_day)]
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSignal:
+    """A non-periodic hourly series of arbitrary length (e.g. a week-long
+    grid-carbon or forecast trace).
+
+    `values[i]` covers absolute hours `[start_hour + i, start_hour + i + 1)`
+    where hour 0 is midnight of the campaign's first day.  Outside the
+    covered range the trace clamps (holds its first/last value), so a
+    campaign that outruns its forecast keeps the most recent sample rather
+    than wrapping to stale data.  `period_h` is None: sweeps over a
+    TraceSignal are routed to the trace-grid engine.
+    """
+    values: Tuple[float, ...]
+    start_hour: float = 0.0
+    name: str = "trace"
+
+    def __post_init__(self):
+        if len(self.values) < 1:
+            raise ValueError("TraceSignal needs at least one value")
+        # frozen dataclass: stash the array form once (sample() is hot in
+        # large sweeps and must not re-convert the tuple per case)
+        object.__setattr__(self, "_arr",
+                           np.asarray(self.values, dtype=float))
+
+    @property
+    def period_h(self) -> Optional[float]:
+        return None
+
+    @property
+    def hours(self) -> float:
+        """Length of the covered range in hours."""
+        return float(len(self.values))
+
+    def at(self, hour: float) -> float:
+        i = math.floor(hour - self.start_hour)
+        return self.values[min(max(i, 0), len(self.values) - 1)]
+
+    def sample(self, hours) -> np.ndarray:
+        """Vectorized `at` over an array of absolute hours."""
+        idx = np.clip(np.floor(np.asarray(hours, dtype=float)
+                               - self.start_hour).astype(int),
+                      0, len(self.values) - 1)
+        return self._arr[idx]
+
+
+def as_trace(values, start_hour: float = 0.0,
+             name: str = "trace") -> TraceSignal:
+    """Coerce an hourly sequence (or pass through a Signal) to a trace.
+
+    The Signal test requires a *callable* `at` — jnp arrays and pandas
+    Series expose a non-callable `.at` indexer and must be treated as
+    plain hourly sequences, not passed through unconverted.
+    """
+    if isinstance(values, TraceSignal):
+        return values
+    if callable(getattr(values, "at", None)):   # already some Signal
+        return values
+    return TraceSignal(tuple(float(v) for v in values),
+                       start_hour=start_hour, name=name)
+
+
+def sample_signal(signal, hours) -> np.ndarray:
+    """Vectorized sampling of any Signal (or GridCarbonModel) at an array
+    of absolute hours.  Bundled signal classes take closed-form index
+    paths; anything else falls back to a per-hour `at` loop."""
+    hours = np.asarray(hours, dtype=float)
+    if isinstance(signal, ConstantSignal):
+        return np.full(hours.shape, signal.value)
+    if isinstance(signal, HourlySignal):
+        idx = np.floor(hours).astype(int) % 24
+        return np.asarray(signal.values, dtype=float)[idx]
+    if isinstance(signal, TraceSignal):
+        return signal.sample(hours)
+    if hasattr(signal, "factor_at"):    # GridCarbonModel duck type
+        return sample_signal(carbon_signal(signal), hours)
+    return np.array([float(signal.at(float(h))) for h in hours.ravel()]
+                    ).reshape(hours.shape)
 
 
 def background_signal(bands) -> BandSignal:
@@ -85,10 +199,23 @@ def sample_hourly(source) -> Tuple[float, ...]:
 
 
 def carbon_signal(carbon) -> Signal:
-    """Grid carbon intensity (kg CO2e / kWh) as a Signal."""
-    if getattr(carbon, "hourly_curve", None) is None:
-        return ConstantSignal(carbon.factor_kg_per_kwh, name="carbon")
-    return HourlySignal(sample_hourly(carbon), name="carbon")
+    """Grid carbon intensity (kg CO2e / kWh) as a Signal.
+
+    Accepts a GridCarbonModel *or* any Signal (TraceSignal included, which
+    passes through unchanged) — the one coercion point that lets the
+    simulators and engines treat carbon uniformly instead of special-casing
+    GridCarbonModel vs Signal.
+    """
+    if hasattr(carbon, "factor_at"):            # GridCarbonModel duck type
+        if getattr(carbon, "hourly_curve", None) is None:
+            return ConstantSignal(carbon.factor_kg_per_kwh, name="carbon")
+        return HourlySignal(sample_hourly(carbon), name="carbon")
+    if callable(getattr(carbon, "at", None)):   # already a Signal
+        return carbon
+    raise TypeError(
+        f"carbon must be a GridCarbonModel or a Signal with a callable "
+        f"at(hour); got {type(carbon).__name__} (plain hourly sequences "
+        "are coerced with repro.core.signal.as_trace)")
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +240,29 @@ class SignalSet:
 
     def price_at(self, hour_of_day: float) -> float:
         return self.price.at(hour_of_day) if self.price is not None else 0.0
+
+    def sample(self, grid: Sequence[float]
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Sample every signal on a grid of absolute hours.
+
+        Returns `(background, carbon, price)` arrays of the grid's shape
+        (price is all-zero when no price signal is set).  A convenience
+        over `sample_signal`, which is the primitive the engines call
+        per-signal (they carry cases' signals individually rather than
+        as a SignalSet).
+        """
+        hours = np.asarray(grid, dtype=float)
+        bg = sample_signal(self.background, hours)
+        cf = sample_signal(self.carbon, hours)
+        pr = (sample_signal(self.price, hours) if self.price is not None
+              else np.zeros(hours.shape))
+        return bg, cf, pr
+
+    def is_periodic(self) -> bool:
+        """True when every bundled signal repeats every 24 h."""
+        return all(is_periodic_24h(s) for s in
+                   (self.background, self.carbon, self.price)
+                   if s is not None)
 
 
 def default_signals(bands, carbon, price: Optional[Signal] = None) -> SignalSet:

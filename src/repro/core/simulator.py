@@ -27,12 +27,13 @@ import dataclasses
 import math
 from typing import List, Optional, Tuple
 
+from repro.core import model
 from repro.core.carbon import GridCarbonModel
 from repro.core.energy import MachineProfile
 from repro.core.policy import BASELINE, POLICIES, TimeBands
 from repro.core.schedule import (Schedule, SchedulingContext, as_schedule,
                                  change_hours)
-from repro.core.signal import Signal
+from repro.core.signal import ConstantSignal, Signal, carbon_signal
 from repro.core.tracker import RunSummary, RunTracker
 from repro.core.workload import OEMWorkload
 
@@ -77,16 +78,21 @@ def _next_boundary(grid: List[float], hour: float) -> float:
 
 def simulate_campaign(workload: OEMWorkload, policy, machine: MachineProfile,
                       bands: TimeBands = TimeBands(),
-                      carbon: Optional[GridCarbonModel] = None,
+                      carbon=None,
                       start_hour: float = 9.0,
                       tracker: Optional[RunTracker] = None,
                       coarse: bool = True,
-                      price: Optional[Signal] = None) -> SimResult:
+                      price: Optional[Signal] = None,
+                      deadline_h: float = 0.0) -> SimResult:
     """Simulate the full campaign under any Schedule (or legacy Policy).
 
     `coarse=True` advances segment-by-segment (exact for piecewise-constant
     decisions, ~1000x faster than per-batch); `coarse=False` delegates to
     the per-batch reference oracle `simulate_campaign_exact`.
+
+    `carbon` may be a GridCarbonModel or any carbon Signal (including a
+    non-periodic TraceSignal); signals are sampled at absolute campaign
+    hours.  `deadline_h` is surfaced to schedules via `ctx.deadline_h`.
 
     This free function is the back-compat surface; prefer
     `repro.carina.Campaign` for new code (it owns calibration, tracking,
@@ -94,38 +100,39 @@ def simulate_campaign(workload: OEMWorkload, policy, machine: MachineProfile,
     """
     if not coarse:
         return simulate_campaign_exact(workload, policy, machine, bands,
-                                       carbon, start_hour, price=price)
-    carbon = carbon or GridCarbonModel()
+                                       carbon, start_hour, price=price,
+                                       deadline_h=deadline_h)
+    carbon_sig = carbon_signal(carbon or GridCarbonModel())
     schedule = as_schedule(policy)
     grid = _segment_grid(
         schedule, bands,
-        hourly_signals=(price is not None or carbon.hourly_curve is not None))
+        hourly_signals=(price is not None
+                        or not isinstance(carbon_sig, ConstantSignal)))
     n_total = float(workload.n_scenarios)
     remaining = n_total
     t_h = start_hour
     energy_kwh = 0.0
     co2_kg = 0.0
     cost_usd = 0.0
-    per_batch_oh = workload.batch_overhead_s
 
     while remaining > 0:
         h = t_h % 24.0
         band = bands.band_at(h)
         b = bands.background(band)
+        cf = carbon_sig.at(t_h)
         ctx = SchedulingContext(
             hour_of_day=h, band=band, background=b,
-            carbon_factor=carbon.factor_at(h),
-            price_usd_per_kwh=price.at(h) if price is not None else 0.0,
+            carbon_factor=cf,
+            price_usd_per_kwh=price.at(t_h) if price is not None else 0.0,
             elapsed_h=t_h - start_hour,
-            progress=1.0 - remaining / n_total)
+            progress=1.0 - remaining / n_total,
+            deadline_h=deadline_h)
         d = schedule.decide(ctx)
         u, batch = d.intensity, d.batch_size
         seg_h = _next_boundary(grid, h) - h
 
-        r_eff = workload.rate_at_full * u * max(1.0 - machine.gamma * b, 0.05)
-        batch_time_s = per_batch_oh + batch / max(r_eff, 1e-9)
-        work_frac = (batch / max(r_eff, 1e-9)) / batch_time_s
-        scen_per_s = batch / batch_time_s
+        r = model.campaign_rates(u, batch, b, workload, machine)
+        scen_per_s = r.scen_per_s
 
         seg_s = seg_h * 3600.0
         max_scen = scen_per_s * seg_s
@@ -135,12 +142,8 @@ def simulate_campaign(workload: OEMWorkload, policy, machine: MachineProfile,
         else:
             done = max_scen
 
-        p_work = machine.power(u, b)
-        p_oh = machine.idle_w + machine.dyn_w * (
-            machine.overhead_w_frac * u + b) ** machine.alpha
-        p_avg = work_frac * p_work + (1 - work_frac) * p_oh
-        e_kwh = p_avg * seg_s / 3.6e6
-        c_kg = carbon.co2_kg(e_kwh, hour_of_day=h)
+        e_kwh = r.p_avg_w * seg_s / 3.6e6
+        c_kg = e_kwh * cf
         energy_kwh += e_kwh
         co2_kg += c_kg
         if price is not None:
@@ -164,15 +167,16 @@ def simulate_campaign(workload: OEMWorkload, policy, machine: MachineProfile,
 def simulate_campaign_exact(workload: OEMWorkload, policy,
                             machine: MachineProfile,
                             bands: TimeBands = TimeBands(),
-                            carbon: Optional[GridCarbonModel] = None,
+                            carbon=None,
                             start_hour: float = 9.0,
-                            price: Optional[Signal] = None) -> SimResult:
+                            price: Optional[Signal] = None,
+                            deadline_h: float = 0.0) -> SimResult:
     """Batch-by-batch reference simulation (each batch is atomic and sees the
     band at its start — the segment-based simulate_campaign and the
-    vectorized engine split batches at boundaries; tests pin agreement to
-    <0.5 %).  This is the per-batch oracle the sweep engine is checked
-    against."""
-    carbon = carbon or GridCarbonModel()
+    vectorized engines split batches at boundaries; tests pin agreement to
+    <0.5 %).  This is the per-batch oracle the sweep engines are checked
+    against.  `carbon` may be a GridCarbonModel or any carbon Signal."""
+    carbon_sig = carbon_signal(carbon or GridCarbonModel())
     schedule = as_schedule(policy)
     n_total = float(workload.n_scenarios)
     remaining = n_total
@@ -184,24 +188,23 @@ def simulate_campaign_exact(workload: OEMWorkload, policy,
         h = t_h % 24.0
         band = bands.band_at(h)
         b = bands.background(band)
+        cf = carbon_sig.at(t_h)
         ctx = SchedulingContext(
             hour_of_day=h, band=band, background=b,
-            carbon_factor=carbon.factor_at(h),
-            price_usd_per_kwh=price.at(h) if price is not None else 0.0,
+            carbon_factor=cf,
+            price_usd_per_kwh=price.at(t_h) if price is not None else 0.0,
             elapsed_h=t_h - start_hour,
-            progress=1.0 - remaining / n_total)
+            progress=1.0 - remaining / n_total,
+            deadline_h=deadline_h)
         d = schedule.decide(ctx)
         u, batch = d.intensity, d.batch_size
-        r_eff = workload.rate_at_full * u * max(1.0 - machine.gamma * b, 0.05)
+        r = model.campaign_rates(u, batch, b, workload, machine)
         n = min(batch, remaining)
-        t_work = n / max(r_eff, 1e-9)
+        t_work = n / max(r.r_eff, 1e-9)
         t_oh = workload.batch_overhead_s
-        p_work = machine.power(u, b)
-        p_oh = machine.idle_w + machine.dyn_w * (
-            machine.overhead_w_frac * u + b) ** machine.alpha
-        e = (p_work * t_work + p_oh * t_oh) / 3.6e6
+        e = (r.p_work_w * t_work + r.p_oh_w * t_oh) / 3.6e6
         energy_kwh += e
-        co2_kg += carbon.co2_kg(e, hour_of_day=h)
+        co2_kg += e * cf
         if price is not None:
             cost_usd += e * ctx.price_usd_per_kwh
         t_h += (t_work + t_oh) / 3600.0

@@ -195,17 +195,22 @@ def test_engine_custom_schedule_goes_through_decide(calibrated):
     assert len(seen) >= 24 and any(b == "peak" for b, _, _ in seen)
 
 
-def test_engine_rejects_progress_dependent_schedules(calibrated):
+def test_engine_dispatches_progress_dependent_schedules(calibrated):
     """A schedule consulting ctx.progress/elapsed_h cannot be represented
-    on the engine's periodic hourly grid; sweeping it must be an explicit
-    error, not silently wrong numbers."""
+    on the periodic hourly grid; sweep() must route it to the trace-grid
+    engine (instead of the PR-1 ValueError) and agree with the sequential
+    simulator."""
     wl, m = calibrated
     ramp = FunctionSchedule("ramp", lambda ctx: 0.3 + 0.6 * ctx.progress)
+    r_vec = sweep([SweepCase(ramp, wl, m)])[0]
+    r_seq = simulate_campaign(wl, ramp, m)
+    assert abs(r_vec.runtime_h / r_seq.runtime_h - 1) < 0.005
+    assert abs(r_vec.energy_kwh / r_seq.energy_kwh - 1) < 0.005
+    # the periodic-only sampling helper still refuses explicitly
+    from repro.core import hourly_profile
+    from repro.core.carbon import GridCarbonModel
     with pytest.raises(ValueError, match="progress"):
-        sweep([SweepCase(ramp, wl, m)])
-    # the sequential simulator handles it fine
-    r = simulate_campaign(wl, ramp, m)
-    assert r.runtime_h > 0
+        hourly_profile(ramp, SweepCase(ramp, wl, m).bands, GridCarbonModel())
 
 
 def test_engine_sweep_100_schedules_faster_than_sequential(calibrated):
