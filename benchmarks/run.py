@@ -7,6 +7,10 @@ roofline/kernel benches.  Prints ``name,us_per_call,derived`` CSV rows.
   trace_sweep            trace-grid JAX scan vs sequential simulation on a
                          7-day carbon trace at S in {10, 120, 1000} cases
                          (core/engine_jax.py)
+  optimize_sweep         schedule-optimizer objective throughput: one jitted
+                         population step (256+ candidates/call) vs the NumPy
+                         loop backend, plus end-to-end Campaign.optimize
+                         (core/optimize.py)
   oem_case_studies       §3 case-study table (measured vs simulated vs paper)
   campaign_projection    CARINA applied to a TPU training campaign (dry-run
                          StepCost -> kWh/CO2e for a real recurring retrain)
@@ -93,23 +97,32 @@ def frontier_sweep():
          f"maxerr={err:.1e}")
 
 
+def _week_trace():
+    """The 7-day synthetic carbon trace shared by trace_sweep and
+    optimize_sweep: diurnal swing + weekday drift + deterministic noise
+    around the DTE grid factor."""
+    from repro.core import DTE_FACTOR, TraceSignal
+
+    rng = np.random.RandomState(7)
+    h = np.arange(168)
+    return TraceSignal(tuple(
+        DTE_FACTOR * (1.0 + 0.30 * np.sin(2 * np.pi * h / 24.0)
+                      + 0.08 * np.sin(2 * np.pi * h / 168.0)
+                      + 0.05 * rng.randn(168))), name="week")
+
+
 def trace_sweep():
     """Trace-grid scan engine (jitted jax.lax.scan over a 7-day carbon
     trace) vs sequential simulate_campaign at S in {10, 120, 1000} cases
     (acceptance bar: >=10x at S=1000, or document the measured ratio)."""
-    from repro.core import (MachineProfile, SweepCase, TraceSignal,
-                            calibrate_workload, deadline_schedule,
-                            hourly_schedule, simulate_campaign)
+    from repro.core import (MachineProfile, SweepCase, calibrate_workload,
+                            deadline_schedule, hourly_schedule,
+                            simulate_campaign)
     from repro.core.engine_jax import _HAS_JAX, trace_sweep as run_trace
     from repro.core.workload import OEM_CASE_1
 
     wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
-    rng = np.random.RandomState(7)
-    h = np.arange(168)
-    trace = TraceSignal(tuple(
-        0.448 * (1.0 + 0.30 * np.sin(2 * np.pi * h / 24.0)
-                 + 0.08 * np.sin(2 * np.pi * h / 168.0)
-                 + 0.05 * rng.randn(168))), name="week")
+    trace = _week_trace()
 
     def cases_for(S):
         scheds = [hourly_schedule(f"hourly_{i}",
@@ -151,6 +164,42 @@ def trace_sweep():
     emit(f"trace_sweep/{backend}_deadline_60", t_vec * 1e6 / len(dls),
          f"total_ms={t_vec * 1e3:.1f}_seq_ms={t_seq * 1e3:.1f}_"
          f"speedup={t_seq / t_vec:.1f}x")
+
+
+def optimize_sweep():
+    """Schedule-optimizer throughput (acceptance bar: a single jitted
+    population step evaluates >=256 candidates; report candidates/sec for
+    the jit and NumPy backends, and an end-to-end Campaign.optimize)."""
+    from repro.core import (Campaign, MachineProfile, SweepCase,
+                            calibrate_workload, parametric_schedule)
+    from repro.core.engine_jax import _HAS_JAX, TraceObjective
+    from repro.core.workload import OEM_CASE_1
+
+    wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+    case = SweepCase(parametric_schedule(24), wl, m, deadline_h=220.0)
+    rng = np.random.RandomState(0)
+    for N in (256, 1024):
+        U = 0.05 + 0.90 * rng.rand(N, 24)
+        backends = (("jax",) if _HAS_JAX else ()) + ("numpy",)
+        for backend in backends:
+            to = TraceObjective(case, horizon_h=280.0, backend=backend)
+            to.evaluate_batch(U)          # warm tables (+ jit cache)
+            us = _t(lambda: to.evaluate_batch(U), n=3, warmup=1)
+            emit(f"optimize_sweep/{backend}_pop{N}", us / N,
+                 f"cands_per_s={N / (us / 1e6):.0f}_"
+                 f"step_ms={us / 1e3:.1f}_slots={len(to.lens)}")
+
+    trace = _week_trace()
+    c = Campaign(OEM_CASE_1)
+    t0 = time.perf_counter()
+    res = c.optimize("energy", deadline_h=214.0, carbon_trace=trace,
+                     candidates=256, iterations=30, steps=400,
+                     method="auto" if _HAS_JAX else "cem")
+    dt = time.perf_counter() - t0
+    emit("optimize_sweep/campaign_end_to_end", dt * 1e6,
+         f"method={res.method}_evals={res.evaluations}_"
+         f"energy_kwh={res.result.energy_kwh:.2f}_"
+         f"runtime_h={res.result.runtime_h:.1f}")
 
 
 def oem_case_studies():
@@ -261,6 +310,7 @@ BENCHES = {
     "fig1_policy_frontier": fig1_policy_frontier,
     "frontier_sweep": frontier_sweep,
     "trace_sweep": trace_sweep,
+    "optimize_sweep": optimize_sweep,
     "oem_case_studies": oem_case_studies,
     "campaign_projection": campaign_projection,
     "roofline_table": roofline_table,

@@ -1,0 +1,85 @@
+"""Synthesize a near-optimal schedule instead of picking a hand-written one.
+
+The paper's Figure 1 *evaluates* six fixed policies; `Campaign.optimize`
+*searches* the schedule space.  Here a 7-day grid-carbon forecast and a
+deadline define the problem — min energy subject to finishing on time —
+and the optimizer (population search + gradient polish through the
+jitted trace scan) returns a per-hour intensity schedule that beats
+every fixed policy, including the paper's best (`OffHoursBoost`,
+a.k.a. `peak_aware_boosted_offhours`: ~-9% energy at ~+7% runtime).
+
+    PYTHONPATH=src python examples/optimize_schedule.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import repro.carina as carina
+
+FAST = bool(os.environ.get("CARINA_EXAMPLE_FAST"))   # CI smoke mode
+
+
+def week_trace() -> carina.TraceSignal:
+    """7 days of hourly kg-CO2e/kWh: diurnal swing + weekday drift +
+    deterministic noise (non-periodic, so the trace engine handles it)."""
+    h = np.arange(7 * 24)
+    rng = np.random.RandomState(7)
+    vals = carina.DTE_FACTOR * (1.0
+                                + 0.30 * np.sin(2 * np.pi * h / 24.0)
+                                + 0.08 * np.sin(2 * np.pi * h / 168.0)
+                                + 0.05 * rng.randn(h.size))
+    return carina.as_trace(vals, name="week-forecast")
+
+
+def bar(u: float, width: int = 28) -> str:
+    return "#" * round(u * width)
+
+
+def main():
+    campaign = carina.Campaign(carina.OEM_CASE_1)
+    trace = week_trace()
+
+    # the fixed six under the same forecast; the slowest sets the deadline
+    six = campaign.sweep(list(carina.POLICIES.values()), carbon_trace=trace)
+    deadline = max(r.runtime_h for r in six)
+    boosted = next(r for r in six if "boosted" in r.policy)
+
+    print(f"=== fixed Figure-1 policies under a 7-day carbon forecast "
+          f"(deadline {deadline:.0f} h)")
+    for r in sorted(six, key=lambda r: r.energy_kwh):
+        print(f"  {r.policy:32s} {r.runtime_h:6.1f} h  "
+              f"{r.energy_kwh:5.1f} kWh  {r.co2_kg:5.1f} kg CO2e")
+
+    t0 = time.perf_counter()
+    kw = (dict(candidates=96, iterations=8, steps=60) if FAST
+          else dict(candidates=256, iterations=30, steps=400))
+    opt = campaign.optimize("energy", deadline_h=deadline,
+                            carbon_trace=trace, deltas=True, **kw)
+    dt = time.perf_counter() - t0
+    r = opt.result
+
+    print(f"\n=== {r.policy} ({opt.method}, {opt.evaluations} candidate "
+          f"evaluations, {dt:.1f} s)")
+    print(f"  {r.runtime_h:6.1f} h  {r.energy_kwh:5.1f} kWh  "
+          f"{r.co2_kg:5.1f} kg CO2e  ({r.energy_delta_pct:+.1f}% energy "
+          f"vs baseline)")
+    print(f"  vs OffHoursBoost: {100 * (r.energy_kwh / boosted.energy_kwh - 1):+.1f}% "
+          f"energy, {100 * (r.co2_kg / boosted.co2_kg - 1):+.1f}% CO2e")
+
+    print("\n  hour  optimized intensity                boost policy")
+    u_opt = opt.schedule.intensity_table()
+    bands = carina.TimeBands()
+    for h in range(24):
+        u_fix = carina.PEAK_AWARE_BOOSTED.intensity_at(bands.band_at(h))
+        print(f"   {h:02d}   {u_opt[h]:.2f} {bar(u_opt[h]):28s} "
+              f"{u_fix:.2f} {bar(u_fix)}")
+    print("  (the optimizer rediscovers off-hours shifting on its own — "
+          "and tunes the levels)")
+
+
+if __name__ == "__main__":
+    main()

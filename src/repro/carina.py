@@ -15,10 +15,11 @@ from repro.core import (  # noqa: F401
     # session API
     Campaign, CampaignReport,
     # scheduling surface
-    DeadlineSchedule, Decision, FunctionSchedule, HourlyPolicy, Policy,
-    Schedule, SchedulingContext, as_schedule, constant_schedule,
-    deadline_schedule, hourly_schedule, make_carbon_aware_policy,
-    make_carbon_weighted_boosted, progress_ramp_schedule,
+    DeadlineSchedule, Decision, FunctionSchedule, HourlyPolicy,
+    ParametricSchedule, Policy, Schedule, SchedulingContext, as_schedule,
+    constant_schedule, deadline_schedule, hourly_schedule,
+    make_carbon_aware_policy, make_carbon_weighted_boosted,
+    parametric_schedule, progress_ramp_schedule,
     # the six Figure-1 policies
     BASELINE, PEAK_AWARE_BOOSTED, PEAK_AWARE_AGGRESSIVE, LOW_PRIORITY_ONLY,
     SMALL_BATCHES, LARGE_BATCHES, POLICIES,
@@ -44,8 +45,12 @@ from repro.core import (  # noqa: F401
 )
 
 
+_LAZY = ("trace_sweep", "TraceObjective", "EvalMetrics", "evaluate_params",
+         "Objective", "OptimizeResult", "optimize_schedule", "pareto_front")
+
+
 def __getattr__(name):
-    if name == "trace_sweep":            # lazy: avoids eager jax import
-        from repro.core.engine_jax import trace_sweep
-        return trace_sweep
+    if name in _LAZY:                    # lazy: avoids eager jax import
+        import repro.core
+        return getattr(repro.core, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -20,9 +20,10 @@ from repro.core.policy import (BANDS, BASELINE, LARGE_BATCHES,  # noqa: F401
                                make_carbon_aware_policy,
                                make_carbon_weighted_boosted)
 from repro.core.schedule import (DeadlineSchedule, Decision,  # noqa: F401
-                                 FunctionSchedule, Schedule,
-                                 SchedulingContext, as_schedule,
-                                 deadline_schedule, progress_ramp_schedule)
+                                 FunctionSchedule, ParametricSchedule,
+                                 Schedule, SchedulingContext, as_schedule,
+                                 deadline_schedule, parametric_schedule,
+                                 progress_ramp_schedule)
 from repro.core.session import Campaign, CampaignReport  # noqa: F401
 from repro.core.signal import (TOU_PRICE, BandSignal, ConstantSignal,  # noqa: F401
                                HourlySignal, Signal, SignalSet, TraceSignal,
@@ -38,12 +39,25 @@ from repro.core.tracker import (RunSummary, RunTracker, UnitRecord,  # noqa: F40
 from repro.core.workload import OEM_CASE_1, OEM_CASE_2, OEMWorkload, TrainingCampaign  # noqa: F401
 
 
+_LAZY = {
+    # Resolved lazily (PEP 562): core/engine_jax.py attempts a
+    # module-level jax import, and eager re-export here would make every
+    # `import repro.core` pay jax startup even on pure-NumPy paths
+    # (core/optimize.py imports engine_jax transitively).  engine.sweep()
+    # likewise imports the trace engine on demand.
+    "trace_sweep": "repro.core.engine_jax",
+    "TraceObjective": "repro.core.engine_jax",
+    "EvalMetrics": "repro.core.engine_jax",
+    "evaluate_params": "repro.core.engine_jax",
+    "Objective": "repro.core.optimize",
+    "OptimizeResult": "repro.core.optimize",
+    "optimize_schedule": "repro.core.optimize",
+    "pareto_front": "repro.core.optimize",
+}
+
+
 def __getattr__(name):
-    # `trace_sweep` is resolved lazily (PEP 562): core/engine_jax.py
-    # attempts a module-level jax import, and eager re-export here would
-    # make every `import repro.core` pay jax startup even on pure-NumPy
-    # paths.  engine.sweep() likewise imports the trace engine on demand.
-    if name == "trace_sweep":
-        from repro.core.engine_jax import trace_sweep
-        return trace_sweep
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -37,7 +38,8 @@ from repro.core import model
 from repro.core.carbon import GridCarbonModel
 from repro.core.energy import MachineProfile
 from repro.core.policy import TimeBands
-from repro.core.schedule import Schedule, SchedulingContext, as_schedule
+from repro.core.schedule import (Schedule, SchedulingContext, as_schedule,
+                                 change_hours)
 from repro.core.signal import Signal, is_periodic_24h, sample_hourly
 from repro.core.simulator import SimResult, fill_deltas
 from repro.core.workload import OEMWorkload
@@ -94,40 +96,73 @@ def _carbon_table(carbon) -> np.ndarray:
         return np.array(sample_hourly(carbon))
 
 
+def _grid_resolution(edges) -> int:
+    """Smallest slots-per-hour (a divisor of 60) aligning every edge;
+    raises for edges finer than one minute."""
+    for k in (1, 2, 3, 4, 5, 6, 10, 12, 15, 20, 30, 60):
+        if all(abs(float(e) * k - round(float(e) * k)) < 1e-9
+               for e in edges):
+            return k
+    raise ValueError(
+        "edges finer than one minute cannot be aligned to a "
+        "simulation grid; use the sequential simulators")
+
+
 def slots_per_hour(bands: TimeBands) -> int:
     """Smallest sub-hour grid resolution that aligns every band edge.
 
     1 for integral edges; e.g. 2 for half-hour edges.  Raises for edges
     finer than one minute (not representable on any reasonable grid).
     """
-    for k in (1, 2, 3, 4, 5, 6, 10, 12, 15, 20, 30, 60):
-        if all(abs(float(e) * k - round(float(e) * k)) < 1e-9
-               for e in bands.edges()):
-            return k
-    raise ValueError(
-        "band edges finer than one minute cannot be aligned to a "
-        "simulation grid; use the sequential simulators")
+    return _grid_resolution(bands.edges())
 
 
-def periodic_decision_profile(schedule, bands: TimeBands
+def case_slots_per_hour(case: "SweepCase") -> int:
+    """Finest grid resolution a case needs: the lcm of the band-edge
+    resolution and the schedule's own `change_hours` resolution.
+
+    This is the dispatcher hook that lets a *schedule* force a sub-hour
+    grid: a 48-slot `ParametricSchedule` advertises half-hour change
+    hours, so its cases route to the trace engine at slots_per_hour=2
+    even under hour-aligned bands.  All resolutions are divisors of 60,
+    so the lcm is too.
+    """
+    sched = as_schedule(case.schedule)
+    return math.lcm(slots_per_hour(case.bands),
+                    _grid_resolution(change_hours(sched, case.bands)))
+
+
+def periodic_decision_profile(schedule, bands: TimeBands,
+                              slots_per_hour: int = 1
                               ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-    """Closed-form (intensity[24], batch[24]) for the bundled Policy /
-    HourlyPolicy classes, which are periodic and progress-free by
-    construction; None for anything that needs decide() sampling."""
+    """Closed-form (intensity, batch) day profiles of shape (24*sph,) for
+    the bundled Policy / HourlyPolicy classes, which are periodic and
+    progress-free by construction; None for anything that needs decide()
+    sampling.  Bands are sampled directly on the sph grid — NOT through
+    the hourly `_band_table`, which rejects sub-hour band edges (the
+    trace engine calls this with sph>1 exactly for those)."""
     from repro.core.policy import HourlyPolicy, Policy
 
+    sph = int(slots_per_hour)
     sched = as_schedule(schedule)
     decide = type(sched).decide if isinstance(sched, Policy) else None
     if decide is HourlyPolicy.decide and sched.hourly_intensity:
-        u = np.array(sched.hourly_intensity, dtype=float)
+        u = np.repeat(np.array(sched.hourly_intensity, dtype=float), sph)
         if sched.low_priority:
             u = u * 0.82
-        return u, np.full(24, float(sched.batch_size))
+        return u, np.full(24 * sph, float(sched.batch_size))
     if decide in (Policy.decide, HourlyPolicy.decide):
-        band_names, _ = _band_table(bands)
-        per_band = {b: sched.intensity_at(b) for b in set(band_names)}
-        u = np.array([per_band[b] for b in band_names])
-        return u, np.full(24, float(sched.batch_size))
+        need = _grid_resolution(bands.edges())
+        if sph % need:
+            raise ValueError(
+                f"slots_per_hour={sph} cannot represent band edges that "
+                f"need {need} slots/hour — sampling would silently alias "
+                "them; sweep() routes such cases to the trace-grid engine "
+                "at the right resolution")
+        names = [bands.band_at(r / sph) for r in range(24 * sph)]
+        per_band = {b: sched.intensity_at(b) for b in set(names)}
+        u = np.array([per_band[b] for b in names])
+        return u, np.full(24 * sph, float(sched.batch_size))
     return None
 
 
@@ -203,7 +238,9 @@ def _case_is_periodic(case: SweepCase, price: Optional[Signal]) -> bool:
         return False
     if price is not None and not is_periodic_24h(price):
         return False
-    return slots_per_hour(case.bands) == 1
+    # the schedule's change_hours count too: a sub-hour-slot schedule
+    # (e.g. a 48-slot ParametricSchedule) aliases on the hourly grid
+    return case_slots_per_hour(case) == 1
 
 
 def sweep(cases: Sequence[SweepCase],
@@ -245,7 +282,10 @@ def sweep(cases: Sequence[SweepCase],
     if trace_idx:
         from repro.core.engine_jax import trace_sweep
         sub = [cases[i] for i in trace_idx]
-        sph = max(slots_per_hour(c.bands) for c in sub)
+        # lcm, not max: mixing half-hour and 20-minute cases in one batch
+        # needs a grid aligning both (all resolutions divide 60)
+        sph = functools.reduce(math.lcm,
+                               (case_slots_per_hour(c) for c in sub))
         res = trace_sweep(sub, price=price, slots_per_hour=sph,
                           progress_buckets=progress_buckets, backend=backend)
         for i, r in zip(trace_idx, res):

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -139,10 +139,10 @@ def _case_tables(case, carbon_sig, price_sig, sph: int, T: int, B: int,
     calls and must not repeat per retry."""
     sched = as_schedule(case.schedule)
     H = 24 * sph
-    if prof is not None:                 # bundled Policy/HourlyPolicy
-        u24, b24 = prof
-        return (np.repeat(u24, sph)[:, None].astype(float),
-                np.repeat(b24, sph)[:, None].astype(float), True)
+    if prof is not None:                 # bundled Policy/HourlyPolicy,
+        u_rows, b_rows = prof            # already sampled at sph resolution
+        return (u_rows[:, None].astype(float),
+                b_rows[:, None].astype(float), True)
 
     g0 = math.floor(case.start_hour * sph) / sph
     if hasattr(sched, "decide_grid"):
@@ -186,7 +186,8 @@ def _case_tables(case, carbon_sig, price_sig, sph: int, T: int, B: int,
     return u_rows, b_rows, not elapsed_dep
 
 
-def _estimate_hours(case, prof, probe, max_hours: float) -> float:
+def _estimate_hours(case, prof, probe, max_hours: float,
+                    sph: int = 1) -> float:
     """Campaign-duration estimate sizing the scan grid.
 
     Near-exact for periodic progress-free tables (one day's throughput is
@@ -194,12 +195,12 @@ def _estimate_hours(case, prof, probe, max_hours: float) -> float:
     decide()-probed schedules.  The scan retries with a doubled horizon
     if it undershoots."""
     sched = as_schedule(case.schedule)
-    bg24 = _bg_table(case.bands, 1)
-    if prof is not None:
-        u24, b24 = prof
-        r = model.campaign_rates(np.asarray(u24), np.asarray(b24), bg24,
-                                 case.workload, case.machine, xp=np)
-        day_scen = float(r.scen_per_s.sum()) * 3600.0
+    bg_day = _bg_table(case.bands, sph)
+    if prof is not None:                 # (24*sph,) day profile
+        u_rows, b_rows = prof
+        r = model.campaign_rates(np.asarray(u_rows), np.asarray(b_rows),
+                                 bg_day, case.workload, case.machine, xp=np)
+        day_scen = float(r.scen_per_s.sum()) * 3600.0 / sph
         if day_scen <= 0.0:
             return max_hours
         dur = case.workload.n_scenarios / day_scen * 24.0
@@ -207,7 +208,7 @@ def _estimate_hours(case, prof, probe, max_hours: float) -> float:
     samples = probe[2]
     u = np.array([s[1] for s in samples])
     b = np.array([s[2] for s in samples])
-    bg = bg24[np.floor([s[0] % 24.0 for s in samples]).astype(int)]
+    bg = bg_day[np.floor([(s[0] % 24.0) * sph for s in samples]).astype(int)]
     rs = model.campaign_rates(u, b, bg, case.workload, case.machine,
                               xp=np).scen_per_s
     floor = rs[rs > 0.02 * rs.max()] if rs.size else rs
@@ -305,6 +306,226 @@ if _HAS_JAX:
         return final
 
 
+# ---------------------------------------------------------------------------
+# Differentiable objective path (the substrate of core/optimize.py).
+#
+# `trace_sweep` above is built for *evaluation*: it probes schedules with
+# Python `decide()` calls, classifies them, and retries with a doubled
+# horizon — none of which can live inside a jax trace.  `TraceObjective`
+# is the same physics specialized for *search*: everything that depends
+# on the case (signals, background, slot lengths, machine scalars) is
+# precomputed once as static arrays, and what remains is a pure function
+#     per-slot intensities (..., n_slots)  ->  EvalMetrics
+# with no Python in the traced region, so `jax.grad` flows through the
+# scan and `jax.vmap` batches hundreds of candidates per jit call.
+# ---------------------------------------------------------------------------
+class EvalMetrics(NamedTuple):
+    """Campaign outcome as a differentiable pytree (floats or arrays).
+
+    `cost_usd` is 0 when no price signal was given; `unfinished` is the
+    fraction of the workload left at the end of the horizon (0 when the
+    campaign completed — optimizers penalize it so solutions that stall
+    past the horizon are driven back into range).
+    """
+    energy_kwh: Any
+    co2_kg: Any
+    runtime_h: Any
+    cost_usd: Any
+    unfinished: Any
+
+
+class TraceObjective:
+    """One sweep case as a pure, vmappable objective over day schedules.
+
+    Construction samples the case's signals over a *fixed* horizon
+    (`horizon_h`, default sized from a mid-intensity duration estimate or
+    the case deadline) — there is no retry-doubling or probe
+    classification afterwards.  `evaluate(u_day)` maps per-slot
+    intensities of shape (..., n_slots) to `EvalMetrics` of shape (...,):
+    on the JAX backend the computation is traceable (grad/vmap/jit
+    compose over it); on the NumPy backend the identical scan runs as a
+    loop, still vectorized over leading axes.
+
+    A schedule that finishes inside the horizon gets exactly the numbers
+    `trace_sweep` would produce for the equivalent `ParametricSchedule`
+    (same grid, same shared rate model); one that does not reports
+    `unfinished > 0` instead of growing the grid.
+    """
+
+    def __init__(self, case, *, price: Optional[Signal] = None,
+                 slots_per_hour: int = 1, horizon_h: Optional[float] = None,
+                 batch_size: float = 50.0, max_days: int = 120,
+                 backend: Optional[str] = None):
+        sph = int(slots_per_hour)
+        self.case = case
+        self.sph = sph
+        self.n_slots = 24 * sph
+        self.batch_size = float(batch_size)
+        self.has_price = price is not None
+        self.use_jax = _use_jax(backend)
+        self._jit = None
+
+        wl, mach = case.workload, case.machine
+        self._scalars = (float(wl.n_scenarios), float(wl.rate_at_full),
+                         float(wl.batch_overhead_s), float(mach.idle_w),
+                         float(mach.dyn_w), float(mach.alpha),
+                         float(mach.gamma), float(mach.overhead_w_frac))
+
+        carbon_sig = carbon_signal(case.carbon or GridCarbonModel())
+        start = float(case.start_hour)
+        g0 = math.floor(start * sph) / sph
+        bg_day = _bg_table(case.bands, sph)
+        if horizon_h is None:
+            horizon_h = self._default_horizon(bg_day, max_days)
+        self.horizon_h = float(min(horizon_h, max_days * 24.0))
+        T = max(int(math.ceil(self.horizon_h * sph)), 1)
+        slot = np.arange(T)
+        t_abs = g0 + slot / sph
+        s0 = int(round(g0 * sph)) % self.n_slots
+        self.rowidx = ((s0 + slot) % self.n_slots).astype(np.int32)
+        self.bg = bg_day[self.rowidx]
+        self.cf = sample_signal(carbon_sig, t_abs)
+        self.pr = (sample_signal(price, t_abs) if price is not None
+                   else np.zeros(T))
+        lens = np.full(T, 3600.0 / sph)
+        lens[0] = (g0 + 1.0 / sph - start) * 3600.0
+        self.lens = lens
+        self.hours = t_abs                 # absolute hour of each slot
+
+    def _default_horizon(self, bg_day: np.ndarray, max_days: int) -> float:
+        """Mid-intensity duration estimate, stretched; or the deadline
+        with margin, whichever is larger (deadline-capped optima sit at
+        the cap, so the grid must comfortably cover it)."""
+        n_scen, *_ = self._scalars
+        r = model.campaign_rates(0.35, self.batch_size, float(bg_day.mean()),
+                                 self.case.workload, self.case.machine)
+        dur = n_scen / max(r.scen_per_s, 1e-9) / 3600.0
+        est = dur * 1.6 + 48.0
+        dl = float(getattr(self.case, "deadline_h", 0.0) or 0.0)
+        if dl > 0.0:
+            est = max(est, dl * 1.25 + 24.0)
+        return min(est, max_days * 24.0)
+
+    # ------------------------------------------------------------------
+    def evaluate(self, u_day) -> EvalMetrics:
+        """EvalMetrics for per-slot intensities `u_day` (..., n_slots).
+
+        Pure: jnp inputs stay traced on the JAX backend (compose with
+        jit/grad/vmap as you like, ideally under `enable_x64` so results
+        match the engines' float64); NumPy inputs run the loop backend.
+        """
+        if self.use_jax and not isinstance(u_day, np.ndarray):
+            return self._evaluate_jax(u_day)
+        return self._evaluate_np(np.asarray(u_day, dtype=float))
+
+    def evaluate_batch(self, U) -> EvalMetrics:
+        """Concrete (NumPy) EvalMetrics for a (N, n_slots) population,
+        evaluated in one jitted call on the JAX backend."""
+        U = np.asarray(U, dtype=float)
+        if not self.use_jax:
+            return self._evaluate_np(U)
+        with enable_x64():
+            out = self._jitted_eval()(jnp.asarray(U))
+        return EvalMetrics(*(np.asarray(x) for x in out))
+
+    def _jitted_eval(self):
+        if self._jit is None:
+            self._jit = jax.jit(self._evaluate_jax)
+        return self._jit
+
+    # ------------------------------------------------------------------
+    def _step_rates(self, u, bg_t, xp):
+        (_, rate, oh, idle, dyn, alpha, gamma, ohfrac) = self._scalars[:8]
+        return model.rates(u, self.batch_size, bg_t, rate_at_full=rate,
+                           batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
+                           alpha=alpha, gamma=gamma, overhead_w_frac=ohfrac,
+                           xp=xp)
+
+    def _evaluate_jax(self, u_day) -> EvalMetrics:
+        n_scen = self._scalars[0]
+        u_day = jnp.asarray(u_day)
+        u_t = jnp.moveaxis(u_day[..., jnp.asarray(self.rowidx)], -1, 0)
+        shape = u_day.shape[:-1]
+
+        def step(carry, xs):
+            remaining, rt, kwh, co2, cost = carry
+            u, bg_t, cf_t, pr_t, ln = xs
+            r = self._step_rates(u, bg_t, jnp)
+            scen = jnp.maximum(r.scen_per_s, 1e-30)
+            # strict branch selection, NOT jnp.minimum(ln, remaining/scen):
+            # when the campaign finishes exactly on a slot boundary, the
+            # minimum's tie splits its gradient across both branches and
+            # the analytic cancellation d(remaining - scen*dt)/du == 0 of
+            # the finish branch is lost — the residue, scaled by the
+            # optimizer's unfinished penalty, produced gradient norms
+            # ~1000x too large at such points.  The tie must take the
+            # finish branch, where the cancellation is exact.
+            dt = jnp.where(remaining > scen * ln, ln, remaining / scen)
+            dt = jnp.where(remaining > 0.0, dt, 0.0)
+            e = r.kwh_per_s * dt
+            return (remaining - r.scen_per_s * dt, rt + dt, kwh + e,
+                    co2 + e * cf_t, cost + e * pr_t), None
+
+        zero = jnp.zeros(shape)
+        init = (jnp.full(shape, n_scen), zero, zero, zero, zero)
+        xs = (u_t, jnp.asarray(self.bg), jnp.asarray(self.cf),
+              jnp.asarray(self.pr), jnp.asarray(self.lens))
+        (remaining, rt, kwh, co2, cost), _ = jax.lax.scan(step, init, xs)
+        return EvalMetrics(kwh, co2, rt / 3600.0, cost, remaining / n_scen)
+
+    def _evaluate_np(self, u_day: np.ndarray) -> EvalMetrics:
+        n_scen = self._scalars[0]
+        u_t = u_day[..., self.rowidx]                       # (..., T)
+        shape = u_day.shape[:-1]
+        remaining = np.full(shape, n_scen)
+        rt = np.zeros(shape)
+        kwh = np.zeros(shape)
+        co2 = np.zeros(shape)
+        cost = np.zeros(shape)
+        for t in range(len(self.lens)):
+            if not (remaining > 0.0).any():
+                break
+            r = self._step_rates(u_t[..., t], float(self.bg[t]), np)
+            scen = np.maximum(r.scen_per_s, 1e-30)
+            ln = self.lens[t]
+            dt = np.where(remaining > 0.0,
+                          np.where(remaining > scen * ln, ln,
+                                   remaining / scen),
+                          0.0)
+            e = r.kwh_per_s * dt
+            remaining = remaining - r.scen_per_s * dt
+            rt = rt + dt
+            kwh = kwh + e
+            co2 = co2 + e * self.cf[t]
+            cost = cost + e * self.pr[t]
+        return EvalMetrics(kwh, co2, rt / 3600.0, cost, remaining / n_scen)
+
+
+def evaluate_params(params, case, *, u_min: float = 0.05, u_max: float = 1.0,
+                    batch_size: float = 50.0,
+                    price: Optional[Signal] = None, slots_per_hour: int = 1,
+                    horizon_h: Optional[float] = None,
+                    backend: Optional[str] = None) -> EvalMetrics:
+    """`EvalMetrics` (energy_kwh, co2_kg, runtime_h, cost_usd, unfinished)
+    for `ParametricSchedule` logits `params` on `case`.
+
+    Pure and jax.grad-/jax.vmap-compatible: the squash and the scan are
+    both traceable, so `jax.grad(lambda p: evaluate_params(p, case).co2_kg)`
+    just works.  For repeated evaluation (optimization loops) build one
+    `TraceObjective` instead — this convenience resamples the case's
+    signals on every call.
+    """
+    from repro.core.schedule import ParametricSchedule
+    obj = TraceObjective(case, price=price, slots_per_hour=slots_per_hour,
+                         horizon_h=horizon_h, batch_size=batch_size,
+                         backend=backend)
+    traced = obj.use_jax and not isinstance(params, np.ndarray)
+    xp = jnp if traced else np
+    u = ParametricSchedule.u_from_logits(xp.asarray(params), u_min, u_max,
+                                         xp=xp)
+    return obj.evaluate(u)
+
+
 def _use_jax(backend: Optional[str]) -> bool:
     if backend == "numpy":
         return False
@@ -355,7 +576,7 @@ def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
     # case, so it must not repeat per retry)
     from repro.core.engine import periodic_decision_profile
     scheds = [as_schedule(c.schedule) for c in cases]
-    profs = [periodic_decision_profile(s, c.bands)
+    profs = [periodic_decision_profile(s, c.bands, sph)
              for s, c in zip(scheds, cases)]
     probes = [None if prof is not None else
               _probe(scheds[i], _ctx_factory(cases[i], carbon_sigs[i],
@@ -363,7 +584,7 @@ def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
                      float(g0[i]), max_hours)
               for i, prof in enumerate(profs)]
 
-    est_h = max(_estimate_hours(c, prof, probe, max_hours)
+    est_h = max(_estimate_hours(c, prof, probe, max_hours, sph)
                 for c, prof, probe in zip(cases, profs, probes))
     T = int(math.ceil(min(est_h, max_hours) * sph))
 

@@ -1,0 +1,456 @@
+"""Schedule synthesis: search the schedule space instead of spot-checking it.
+
+The paper's policy analysis *evaluates* six hand-written policies
+(off-hours boosting buys ~-9% energy for ~+7% runtime); the carbon-aware
+workflow literature (arXiv:2503.13705, arXiv:2508.14625) shows the
+interesting question is what the *optimal* schedule looks like.  This
+module answers it by treating the trace-grid engine as an objective:
+
+  * the search space is `ParametricSchedule` — one intensity logit per
+    day slot, squashed into [u_min, u_max], so every parameter vector is
+    a feasible schedule (`core/schedule.py`);
+  * the objective is `TraceObjective` (`core/engine_jax.py`) — the
+    campaign scan as a pure function of the intensity table, vmappable
+    across candidates and differentiable through `jax.lax.scan`;
+  * two search modes share one scalarization: **grad** (Adam through the
+    scan — exact gradients of energy/CO2/runtime w.r.t. every slot) for
+    the smooth family, and **cem** (a vmapped cross-entropy population
+    search, hundreds of candidates per jit call, NumPy fallback when JAX
+    is absent) which needs no gradients and handles quantized/discrete
+    intensity levels.
+
+Objectives are weighted sums over campaign metrics plus ε-constraints
+(caps) turned into hinge penalties: `minimize co2 s.t. runtime <= D` is
+`Objective(weights={"co2_kg": 1}, constraints={"runtime_h": D})`.  All
+metrics are normalized by a reference evaluation so penalty weights mean
+the same thing across workloads.  `pareto_front` extracts the
+non-dominated set from a population's evaluations, giving the
+runtime/energy (or runtime/CO2) trade curve in one search — the same
+`SimResult` rows the frontier dashboards already render.
+
+The session-level entry point is `Campaign.optimize(...)`
+(`core/session.py`); this module is the engine room and is importable
+without JAX (method="cem" runs on the NumPy backend).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.engine import case_slots_per_hour
+from repro.core.engine_jax import EvalMetrics, TraceObjective, trace_sweep
+from repro.core.schedule import ParametricSchedule
+from repro.core.simulator import SimResult
+
+#: Metrics an objective may weight or cap, with their accepted aliases.
+METRIC_ALIASES: Dict[str, str] = {
+    "energy": "energy_kwh", "energy_kwh": "energy_kwh", "kwh": "energy_kwh",
+    "co2": "co2_kg", "co2_kg": "co2_kg", "carbon": "co2_kg",
+    "runtime": "runtime_h", "runtime_h": "runtime_h", "deadline": "runtime_h",
+    "cost": "cost_usd", "cost_usd": "cost_usd", "price": "cost_usd",
+}
+METRIC_KEYS: Tuple[str, ...] = ("energy_kwh", "co2_kg", "runtime_h",
+                                "cost_usd")
+
+
+def canonical_metric(name: str) -> str:
+    try:
+        return METRIC_ALIASES[name.lower()]
+    except KeyError:
+        raise ValueError(f"unknown metric {name!r}; choose from "
+                         f"{sorted(set(METRIC_ALIASES))}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """What "best schedule" means: weighted metrics + ε-constraints.
+
+    `weights` are summed over normalized metrics (lower is better);
+    `constraints` are caps handled as one-sided hinge penalties of weight
+    `penalty` per *relative* violation — at `penalty=200`, exceeding a
+    cap by 1% costs as much as 2 units of normalized objective, so
+    feasible optima sit within a fraction of a percent of active caps.
+    Unfinished campaigns (workload left past the evaluation horizon) are
+    penalized separately and much harder: they are not schedules at all.
+    """
+    weights: Mapping[str, float]
+    constraints: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    penalty: float = 200.0
+    unfinished_penalty: float = 1e4
+
+    def __post_init__(self):
+        object.__setattr__(self, "weights", {
+            canonical_metric(k): float(v) for k, v in self.weights.items()})
+        object.__setattr__(self, "constraints", {
+            canonical_metric(k): float(v)
+            for k, v in self.constraints.items()})
+        if not self.weights:
+            raise ValueError("objective needs at least one weighted metric")
+        for k, cap in self.constraints.items():
+            if cap <= 0.0:
+                raise ValueError(f"constraint cap for {k} must be positive, "
+                                 f"got {cap}")
+
+    @classmethod
+    def coerce(cls, objective, constraints=None) -> "Objective":
+        """Accept an Objective, a metric name, or a weights mapping."""
+        if isinstance(objective, Objective):
+            if constraints:
+                merged = dict(objective.constraints)
+                merged.update({canonical_metric(k): float(v)
+                               for k, v in constraints.items()})
+                return dataclasses.replace(objective, constraints=merged)
+            return objective
+        if isinstance(objective, str):
+            weights = {canonical_metric(objective): 1.0}
+        else:
+            weights = dict(objective)
+        return cls(weights=weights, constraints=dict(constraints or {}))
+
+    def label(self) -> str:
+        """Short provenance tag for schedule/result names."""
+        parts = [k.split("_")[0] for k, w in self.weights.items() if w]
+        for k in self.constraints:
+            parts.append(f"{k.split('_')[0]}<={self.constraints[k]:g}")
+        return ",".join(parts)
+
+
+def scalarize(metrics: EvalMetrics, objective: Objective,
+              scales: Mapping[str, float], xp=np):
+    """The scalar loss both search modes minimize (float or array in,
+    same shape out; polymorphic over NumPy/jnp like the rate model)."""
+    val = 0.0
+    for k, w in objective.weights.items():
+        val = val + w * getattr(metrics, k) / scales[k]
+    for k, cap in objective.constraints.items():
+        val = val + objective.penalty * xp.maximum(
+            getattr(metrics, k) / cap - 1.0, 0.0)
+    # deadband on the unfinished penalty: a linear term would leak the
+    # (analytically zero, numerically fp-noise) gradient of the finished
+    # state's residual into every step
+    return val + objective.unfinished_penalty * xp.maximum(
+        metrics.unfinished - 1e-9, 0.0)
+
+
+@dataclasses.dataclass
+class OptimizeResult:
+    """What a schedule search hands back.
+
+    `schedule` is the optimized `ParametricSchedule` (drop it into
+    `Campaign.run/sweep`, simulators, or controllers like any other
+    schedule); `result` is its `SimResult` as evaluated by the real sweep
+    engine, directly comparable to any sweep/frontier row; `frontier` is
+    the non-dominated set of the final population (population methods
+    only) for the frontier dashboards.
+    """
+    schedule: ParametricSchedule
+    result: SimResult
+    value: float                      # scalarized objective at the optimum
+    metrics: EvalMetrics              # raw metrics at the optimum (floats)
+    objective: Objective
+    method: str
+    history: List[float]              # best objective value per iteration
+    evaluations: int                  # total candidate evaluations
+    frontier: List[SimResult] = dataclasses.field(default_factory=list)
+
+
+def pareto_front(points: np.ndarray) -> np.ndarray:
+    """Boolean mask of the non-dominated rows of `points` (N, K), all
+    objectives minimized.  K=2 runs the sort-and-scan algorithm (fine for
+    whole-population inputs); K>2 falls back to pairwise checks."""
+    pts = np.asarray(points, dtype=float)
+    n, k = pts.shape
+    mask = np.zeros(n, dtype=bool)
+    if k == 2:
+        order = np.lexsort((pts[:, 1], pts[:, 0]))
+        best_y = math.inf
+        for i in order:
+            if pts[i, 1] < best_y - 1e-12:
+                mask[i] = True
+                best_y = pts[i, 1]
+        return mask
+    for i in range(n):
+        d = ((pts <= pts[i]).all(axis=1) & (pts < pts[i]).any(axis=1))
+        mask[i] = not d.any()
+    return mask
+
+
+def _metrics_at(metrics: EvalMetrics, i) -> EvalMetrics:
+    return EvalMetrics(*(float(np.asarray(f)[i]) for f in metrics))
+
+
+def _result_from_metrics(name: str, m: EvalMetrics,
+                         has_price: bool) -> SimResult:
+    return SimResult(policy=name, runtime_h=m.runtime_h,
+                     energy_kwh=m.energy_kwh, co2_kg=m.co2_kg,
+                     cost_usd=m.cost_usd if has_price else None)
+
+
+# ---------------------------------------------------------------------------
+# Search modes
+# ---------------------------------------------------------------------------
+def _grad_search(to: TraceObjective, objective: Objective, scales, p0,
+                 u_min: float, u_max: float, steps: int, lr: float
+                 ) -> Tuple[np.ndarray, List[float], int]:
+    """Adam on the logits, gradients through the scan.  Returns the best
+    parameters seen (not the last iterate — the loss is nonconvex)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compat import enable_x64
+
+    def loss(p):
+        u = ParametricSchedule.u_from_logits(p, u_min, u_max, xp=jnp)
+        return scalarize(to.evaluate(u), objective, scales, xp=jnp)
+
+    value_and_grad = jax.jit(jax.value_and_grad(loss))
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    history: List[float] = []
+    with enable_x64():
+        p = jnp.asarray(np.asarray(p0, dtype=float))
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        best_val, best_p = math.inf, p
+        for t in range(1, steps + 1):
+            val, g = value_and_grad(p)
+            val = float(val)
+            if val < best_val:
+                best_val, best_p = val, p
+            history.append(min(val, history[-1]) if history else val)
+            # clip the global norm: one pathological step (a constraint
+            # kink, a slot-boundary tie) must not poison Adam's moments
+            gnorm = jnp.linalg.norm(g)
+            g = jnp.where(gnorm > 10.0, g * (10.0 / gnorm), g)
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * g * g
+            mhat = m / (1.0 - b1 ** t)
+            vhat = v / (1.0 - b2 ** t)
+            # hold, then cosine-decay over the last 40%: the constraint
+            # hinges make the endgame landscape stiff and a fixed step
+            # oscillates across them, but decaying from the start freezes
+            # the slot structure before it has moved
+            frac = max(t / steps - 0.6, 0.0) / 0.4
+            lr_t = lr * (0.05 + 0.475 * (1.0 + math.cos(math.pi * frac)))
+            p = p - lr_t * mhat / (jnp.sqrt(vhat) + eps)
+        return np.asarray(best_p), history, steps
+
+
+def _cem_search(to: TraceObjective, objective: Objective, scales, p0,
+                u_min: float, u_max: float, candidates: int, iterations: int,
+                elite_frac: float, init_std: float, smoothing: float,
+                seed: int, collect: Optional[list],
+                levels: Optional[np.ndarray] = None
+                ) -> Tuple[np.ndarray, List[float], int]:
+    """Cross-entropy method over the logits: sample a Gaussian population,
+    evaluate all candidates in one vmapped/jitted call (`evaluate_batch`),
+    refit mean/std on the elites.  Needs no gradients, so it runs on the
+    NumPy backend too and survives quantized intensity levels: with
+    `levels` set, candidates are snapped *before* evaluation, so the
+    search optimizes the same quantized objective the result reports —
+    snapping only the final answer could silently break the constraints
+    the smooth search satisfied."""
+    rng = np.random.RandomState(seed)
+    n = len(p0)
+    mean = np.asarray(p0, dtype=float).copy()
+    std = np.full(n, float(init_std))
+    n_elite = max(2, int(round(candidates * elite_frac)))
+    best_val, best_p = math.inf, mean.copy()
+    history: List[float] = []
+    for _ in range(iterations):
+        pop = mean[None, :] + std[None, :] * rng.randn(candidates, n)
+        pop[0] = mean                     # incumbent mean
+        pop[1] = best_p                   # elitism: best-so-far survives
+        u = ParametricSchedule.u_from_logits(pop, u_min, u_max, xp=np)
+        if levels is not None:            # same snap as the final schedule
+            u = levels[np.argmin(np.abs(u[..., None]
+                                        - levels[None, None, :]), axis=-1)]
+        mets = to.evaluate_batch(u)
+        vals = np.asarray(scalarize(mets, objective, scales, xp=np))
+        if collect is not None:
+            collect.append((pop.copy(), mets))
+        order = np.argsort(vals)
+        if vals[order[0]] < best_val:
+            best_val = float(vals[order[0]])
+            best_p = pop[order[0]].copy()
+        history.append(best_val)
+        elite = pop[order[:n_elite]]
+        mean = smoothing * elite.mean(axis=0) + (1.0 - smoothing) * mean
+        std = smoothing * elite.std(axis=0) + (1.0 - smoothing) * std
+        std = np.maximum(std, 0.02)       # keep exploring
+    return best_p, history, candidates * iterations
+
+
+# ---------------------------------------------------------------------------
+# The entry point
+# ---------------------------------------------------------------------------
+def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
+                      constraints: Optional[Mapping] = None, *,
+                      method: str = "auto",
+                      n_slots: Optional[int] = None,
+                      u_min: float = 0.05, u_max: float = 1.0,
+                      batch_size: int = 50,
+                      price=None,
+                      horizon_h: Optional[float] = None,
+                      candidates: int = 256, iterations: int = 40,
+                      elite_frac: float = 0.125, init_std: float = 1.5,
+                      smoothing: float = 0.7,
+                      steps: int = 800, lr: float = 0.1,
+                      init: Union[float, Sequence[float]] = 0.6,
+                      levels: Optional[Sequence[float]] = None,
+                      seed: int = 0, backend: Optional[str] = None,
+                      pareto: bool = False) -> OptimizeResult:
+    """Search the `ParametricSchedule` space for the case's best schedule.
+
+    `objective` is a metric name, a weights mapping, or an `Objective`;
+    `constraints` maps metrics to caps (ε-constraints), e.g.
+    ``optimize_schedule(case, "co2", {"runtime_h": 200.0})`` for
+    *min CO2 s.t. the 200 h deadline*.  `method`: ``"grad"`` (Adam
+    through the scan; JAX only — excellent from a warm start, can stall
+    from a cold one), ``"cem"`` (vmapped population search; robust, runs
+    on the NumPy backend too), ``"cem+grad"`` (population search, then
+    gradient polish from its best candidate), or ``"auto"``
+    (cem+grad when JAX is importable, else cem).  `init` seeds the
+    search — a flat intensity or
+    a per-slot table (e.g. an existing policy's, via
+    `ParametricSchedule.from_intensities`).  `levels`, if given,
+    restricts intensities to a discrete level set: population candidates
+    are snapped *before* evaluation (the search optimizes the quantized
+    objective, so constraints hold for the quantized schedule) and the
+    returned schedule's table is exactly level-valued.  `pareto=True`
+    (cem only) attaches the non-dominated runtime-vs-primary-metric set
+    of every candidate evaluated.
+
+    See docs/OPTIMIZER.md for objective/constraint semantics and for
+    when grad beats population search.
+    """
+    obj = Objective.coerce(objective, constraints)
+    if candidates < 2:
+        raise ValueError(f"candidates must be >= 2, got {candidates} "
+                         "(the population keeps the incumbent mean and "
+                         "the best-so-far candidate)")
+    sph = case_slots_per_hour(case)
+    if n_slots is not None:
+        if n_slots % 24:
+            raise ValueError(f"n_slots must be a multiple of 24, "
+                             f"got {n_slots}")
+        sph = math.lcm(sph, n_slots // 24)
+    n = 24 * sph
+
+    needs_price = any(k == "cost_usd" for k in
+                      list(obj.weights) + list(obj.constraints))
+    if needs_price and price is None:
+        raise ValueError("objective involves cost_usd but no price signal "
+                         "was given")
+
+    if horizon_h is None and "runtime_h" in obj.constraints:
+        horizon_h = obj.constraints["runtime_h"] * 1.25 + 24.0
+    to = TraceObjective(case, price=price, slots_per_hour=sph,
+                        horizon_h=horizon_h, batch_size=float(batch_size),
+                        backend=backend)
+
+    if np.ndim(init) == 0:
+        init_u = np.full(n, float(init))
+    else:
+        init_arr = np.asarray(init, dtype=float)
+        if n % len(init_arr):
+            raise ValueError(f"init table of {len(init_arr)} slots does not "
+                             f"tile the {n}-slot grid")
+        init_u = np.repeat(init_arr, n // len(init_arr))
+    seed_sched = ParametricSchedule.from_intensities(
+        init_u, u_min=u_min, u_max=u_max, batch_size=batch_size)
+    p0 = np.asarray(seed_sched.logits, dtype=float)
+
+    # normalization: one reference evaluation makes weights/penalties
+    # workload-independent ("1 unit" = the seed schedule's metric)
+    ref = to.evaluate_batch(init_u[None, :])
+    scales = {k: max(abs(float(np.asarray(getattr(ref, k))[0])), 1e-9)
+              for k in METRIC_KEYS}
+
+    if method == "auto":
+        method = ("cem+grad" if (to.use_jax and levels is None) else "cem")
+    if method in ("grad", "cem+grad") and not to.use_jax:
+        raise RuntimeError(f"method={method!r} needs the JAX backend "
+                           "(jax is not importable or backend='numpy')")
+    if method not in ("grad", "cem", "cem+grad"):
+        raise ValueError(f"unknown method {method!r}; use 'grad', 'cem', "
+                         "'cem+grad' or 'auto'")
+    if levels is not None and "grad" in method:
+        raise ValueError(
+            "levels= needs a population method (use method='cem' or "
+            "'auto'): a gradient search optimizes the smooth objective, "
+            "and snapping its result afterwards could silently violate "
+            "the constraints the search satisfied")
+
+    lv = (np.sort(np.asarray(levels, dtype=float))
+          if levels is not None else None)
+    collect: Optional[list] = [] if (pareto and "cem" in method) else None
+    n_evals = 0
+    history: List[float] = []
+    if "cem" in method:
+        best_p, history, n_evals = _cem_search(
+            to, obj, scales, p0, u_min, u_max, candidates, iterations,
+            elite_frac, init_std, smoothing, seed, collect, levels=lv)
+        p0 = best_p                       # grad polish starts from the
+    if "grad" in method:                  # population's best candidate
+        best_p, ghist, gevals = _grad_search(
+            to, obj, scales, p0, u_min, u_max, steps, lr)
+        start = history[-1] if history else math.inf
+        history += [min(v, start) for v in ghist]
+        n_evals += gevals
+
+    name = f"optimized[{obj.label()}]"
+    sched = seed_sched.with_logits(best_p, name=name)
+    if lv is not None:
+        # snap at table materialization (ParametricSchedule.levels) — the
+        # identical argmin the search applied per candidate; a
+        # from_intensities round trip could not reproduce the level
+        # values bit-exactly
+        sched = dataclasses.replace(sched, name=name + "#q",
+                                    levels=tuple(float(v) for v in lv))
+
+    # report through the real engine so the row is directly comparable to
+    # any sweep/frontier output (same physics; fp-level agreement)
+    final_case = dataclasses.replace(case, schedule=sched, label=sched.name)
+    result = trace_sweep([final_case], price=price, slots_per_hour=sph,
+                         backend=backend)[0]
+    best_metrics = _metrics_at(
+        to.evaluate_batch(sched.intensity_table()[None, :]), 0)
+    value = float(scalarize(best_metrics, obj, scales, xp=np))
+
+    frontier: List[SimResult] = []
+    if collect:
+        all_mets = EvalMetrics(*(np.concatenate(
+            [np.asarray(getattr(m, k)) for _, m in collect])
+            for k in EvalMetrics._fields))
+        # frontier axes: runtime vs the heaviest non-runtime weighted
+        # metric (runtime is always the frontier's x-axis)
+        others = [k for k in obj.weights
+                  if k != "runtime_h" and obj.weights[k]]
+        primary = (max(others, key=lambda k: abs(obj.weights[k]))
+                   if others else "energy_kwh")
+        feasible = all_mets.unfinished <= 1e-6
+        for k, cap in obj.constraints.items():
+            if k != "runtime_h":
+                feasible &= getattr(all_mets, k) <= cap * (1.0 + 1e-6)
+        idx = np.flatnonzero(feasible)
+        if idx.size:
+            pts = np.stack([all_mets.runtime_h[idx],
+                            getattr(all_mets, primary)[idx]], axis=1)
+            front = idx[pareto_front(pts)]
+            front = front[np.argsort(all_mets.runtime_h[front])]
+            frontier = [
+                _result_from_metrics(f"{name}/pareto{j}",
+                                     _metrics_at(all_mets, i), to.has_price)
+                for j, i in enumerate(front)]
+
+    return OptimizeResult(schedule=sched, result=result, value=value,
+                          metrics=best_metrics, objective=obj, method=method,
+                          history=history, evaluations=n_evals,
+                          frontier=frontier)
+
+
+__all__ = ["METRIC_KEYS", "Objective", "OptimizeResult", "canonical_metric",
+           "optimize_schedule", "pareto_front", "scalarize"]

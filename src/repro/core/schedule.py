@@ -24,7 +24,7 @@ hourly-constant, so the hourly grid is always a safe refinement.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Protocol, Tuple, runtime_checkable
+from typing import Callable, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
@@ -177,6 +177,145 @@ def progress_ramp_schedule(u_start: float = 0.4, u_end: float = 0.9,
 
     return FunctionSchedule(name or f"ramp_{u_start:g}_{u_end:g}", ramp,
                             batch_size)
+
+
+def _sigmoid(z, xp=np):
+    """Numerically stable logistic, polymorphic over the array namespace
+    (tanh is bounded both directions, unlike the naive 1/(1+exp(-z)))."""
+    return 0.5 * (xp.tanh(0.5 * z) + 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParametricSchedule:
+    """The optimizer's schedule family: one free intensity parameter per
+    slot of the day, squashed through a sigmoid into [u_min, u_max].
+
+    `logits[i]` controls the worker intensity over local hours
+    `[24 i / n, 24 (i + 1) / n)` where `n = len(logits)`; the intensity is
+    `u_min + (u_max - u_min) * sigmoid(logits[i])`, so every point of the
+    parameter space is a feasible schedule and gradients never push
+    intensities out of range.  `n` may exceed 24 for sub-hour resolution
+    (48 -> half-hour slots); slot edges must align to a minute grid like
+    band edges (n must divide a multiple of 24 up to 24*60).
+
+    The family is deliberately *periodic and progress-free*: the decision
+    depends on hour-of-day only, so it lowers to a decision table with no
+    Python in the engines' hot loops.  `decide_grid` (the vectorized
+    decision protocol) builds the whole table in one NumPy call;
+    `core/engine_jax.py`'s `TraceObjective` consumes the same
+    `u_from_logits` mapping inside jit/grad, which is what makes
+    `core/optimize.py`'s gradient search possible.
+
+    `from_intensities` inverts the squash (warm-starting the optimizer
+    from a hand-written policy); `with_logits` rebinds parameters on an
+    otherwise identical schedule (how the optimizer materializes its
+    result).  A non-None `levels` snaps the materialized table to the
+    nearest allowed intensity (exactly — membership tests against the
+    level set hold; the squash cannot represent arbitrary values
+    bit-exactly through a logit round trip), which is how the optimizer
+    returns discrete decision tables.
+    """
+    logits: Tuple[float, ...]
+    u_min: float = 0.05
+    u_max: float = 1.0
+    batch_size: int = 50
+    name: str = "parametric"
+    levels: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        n = len(self.logits)
+        if n < 1:
+            raise ValueError("ParametricSchedule needs at least one slot")
+        if (24.0 * 60.0) % n:
+            raise ValueError(
+                f"n_slots={n} does not divide the day on a minute grid; "
+                "use a divisor of 1440 (24, 48, 96, ...)")
+        if not (0.0 <= self.u_min < self.u_max <= 1.0):
+            raise ValueError(
+                f"need 0 <= u_min < u_max <= 1, got ({self.u_min}, "
+                f"{self.u_max})")
+        # materialize the decision table once (frozen dataclass, so
+        # decide() would otherwise recompute the sigmoid + level snap on
+        # every sequential-simulator segment)
+        u = self.u_from_logits(np.asarray(self.logits, dtype=float),
+                               self.u_min, self.u_max, xp=np)
+        if self.levels is not None:
+            lv = np.asarray(self.levels, dtype=float)
+            u = lv[np.argmin(np.abs(u[:, None] - lv[None, :]), axis=1)]
+        object.__setattr__(self, "_table", u)
+
+    # ---- parameter mapping (shared with the jitted objective) -------------
+    @staticmethod
+    def u_from_logits(logits, u_min: float = 0.05, u_max: float = 1.0,
+                      xp=np):
+        """logits -> intensities in [u_min, u_max]; works for NumPy *and*
+        jnp arrays (the one definition the optimizer differentiates)."""
+        return u_min + (u_max - u_min) * _sigmoid(logits, xp=xp)
+
+    @classmethod
+    def from_intensities(cls, intensities, *, u_min: float = 0.05,
+                         u_max: float = 1.0, batch_size: int = 50,
+                         name: str = "parametric") -> "ParametricSchedule":
+        """Invert the squash: the ParametricSchedule whose table matches
+        `intensities` (clipped into the open (u_min, u_max) interval)."""
+        u = np.clip(np.asarray(intensities, dtype=float),
+                    u_min + 1e-4 * (u_max - u_min),
+                    u_max - 1e-4 * (u_max - u_min))
+        frac = (u - u_min) / (u_max - u_min)
+        return cls(tuple(float(v) for v in np.log(frac / (1.0 - frac))),
+                   u_min=u_min, u_max=u_max, batch_size=batch_size,
+                   name=name)
+
+    def with_logits(self, logits, name: str = "") -> "ParametricSchedule":
+        return dataclasses.replace(
+            self, logits=tuple(float(v) for v in np.asarray(logits).ravel()),
+            name=name or self.name)
+
+    # ---- derived views ----------------------------------------------------
+    @property
+    def n_slots(self) -> int:
+        return len(self.logits)
+
+    def intensity_table(self) -> np.ndarray:
+        """(n_slots,) intensities — the schedule as a decision table
+        (snapped exactly onto `levels` when set)."""
+        return self._table.copy()
+
+    # ---- Schedule protocol ------------------------------------------------
+    # Slot lookups add a half-ulp guard (+1e-9 slots) before flooring:
+    # when 24/n_slots is not binary-representable (n_slots = 120, 240,
+    # ...), a grid hour sitting exactly on a slot edge can compute as
+    # 40.999999999999996 and truncate one slot low, breaking the 1e-9
+    # engine-consistency contract with the sequential simulator.
+    def decide(self, ctx: SchedulingContext) -> Decision:
+        i = int((ctx.hour_of_day % 24.0) * self.n_slots / 24.0 + 1e-9)
+        return Decision(float(self._table[min(i, self.n_slots - 1)]),
+                        self.batch_size)
+
+    def decide_grid(self, ctx: SchedulingContext):
+        """Vectorized decision protocol: hour-of-day arrays in, the whole
+        intensity table out (no Python in the engines' hot loops)."""
+        hod = np.asarray(ctx.hour_of_day, dtype=float)
+        idx = np.minimum(np.floor((hod % 24.0) * self.n_slots / 24.0 + 1e-9),
+                         self.n_slots - 1).astype(int)
+        u = self.intensity_table()[idx]
+        return u, np.broadcast_to(float(self.batch_size), np.shape(u))
+
+    def change_hours(self, bands) -> Tuple[float, ...]:
+        """Slot edges: the engines refine their grid to align them (a
+        48-slot schedule forces a half-hour trace grid)."""
+        return tuple(24.0 * i / self.n_slots for i in range(self.n_slots + 1))
+
+
+def parametric_schedule(n_slots: int = 24, *, init: float = 0.6,
+                        u_min: float = 0.05, u_max: float = 1.0,
+                        batch_size: int = 50,
+                        name: str = "parametric") -> ParametricSchedule:
+    """A flat ParametricSchedule at intensity `init` — the optimizer's
+    default starting point."""
+    return ParametricSchedule.from_intensities(
+        np.full(n_slots, float(init)), u_min=u_min, u_max=u_max,
+        batch_size=batch_size, name=name)
 
 
 class _LegacyPolicyAdapter:

@@ -214,6 +214,71 @@ class Campaign:
         return (frontier_from_sweep(results, base=self.baseline())
                 if deltas else results)
 
+    def optimize(self, objective="co2", *, constraints=None,
+                 deadline_h: float = 0.0, carbon_trace=None,
+                 deltas: bool = False, **kwargs):
+        """Synthesize a near-optimal schedule for this campaign.
+
+        Searches the `ParametricSchedule` space (per-slot intensities)
+        against the calibrated workload/machine on the trace-grid
+        objective (core/optimize.py): gradient descent through the
+        jitted scan for the smooth family, or a vmapped population/CEM
+        search evaluating hundreds of candidates per jit call.
+
+        `objective` is a metric name ("co2", "energy", "runtime",
+        "cost"), a weights mapping for weighted-sum trade-offs, or an
+        `Objective`; `constraints` maps metrics to caps
+        (ε-constraints).  `deadline_h` is shorthand for a runtime cap —
+        ``optimize("co2", deadline_h=200.0)`` reads *min CO2 subject to
+        finishing in 200 h*.  `carbon_trace` swaps in a non-periodic
+        hourly forecast exactly like `Campaign.sweep`.  Remaining
+        keyword arguments go to `optimize_schedule` (method, candidates,
+        iterations, steps, lr, n_slots, u_min/u_max, levels, pareto,
+        seed, ...).
+
+        Returns an `OptimizeResult`: `.schedule` (a drop-in Schedule),
+        `.result` (a SimResult comparable to sweep/frontier rows —
+        delta columns filled vs the calibrated baseline when
+        `deltas=True`), and `.frontier` (the population's Pareto set,
+        when `pareto=True` with the cem method).
+        """
+        from repro.core.optimize import canonical_metric, optimize_schedule
+        wl, m = self.calibrated()
+        carbon = (as_trace(carbon_trace, name="carbon-trace")
+                  if carbon_trace is not None else self.carbon)
+        # canonicalize aliases ("runtime", "deadline") BEFORE merging the
+        # deadline_h shorthand, so an explicit user cap always wins and
+        # the runtime cap is found for case.deadline_h below
+        constraints = {canonical_metric(k): float(v)
+                       for k, v in dict(constraints or {}).items()}
+        if deadline_h:
+            constraints.setdefault("runtime_h", float(deadline_h))
+        case = SweepCase(self.schedule, wl, m, self.bands, carbon,
+                         self.start_hour,
+                         deadline_h=float(constraints.get("runtime_h", 0.0)))
+        if "init" not in kwargs:
+            # warm-start from this campaign's own schedule when it has a
+            # closed-form day profile (gradient polish converges much
+            # faster near a sensible incumbent than from a flat table);
+            # sampled at the case's grid resolution so sub-hour band
+            # edges are not aliased away
+            from repro.core.engine import (case_slots_per_hour,
+                                           periodic_decision_profile)
+            from repro.core.schedule import ParametricSchedule
+            prof = periodic_decision_profile(self.schedule, self.bands,
+                                             case_slots_per_hour(case))
+            if prof is not None:
+                kwargs["init"] = prof[0]
+            elif isinstance(self.schedule, ParametricSchedule):
+                # a previous optimization's result IS a day profile:
+                # refine the incumbent instead of restarting flat
+                kwargs["init"] = self.schedule.intensity_table()
+        out = optimize_schedule(case, objective, constraints,
+                                price=self.price, **kwargs)
+        if deltas:
+            fill_deltas([out.result] + out.frontier, self.baseline())
+        return out
+
     # ------------------------------------------------------------------
     # Training campaigns
     # ------------------------------------------------------------------

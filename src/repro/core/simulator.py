@@ -117,13 +117,19 @@ def simulate_campaign(workload: OEMWorkload, policy, machine: MachineProfile,
 
     while remaining > 0:
         h = t_h % 24.0
-        band = bands.band_at(h)
+        # sample piecewise-constant inputs just *inside* the segment
+        # (same 1e-9 tolerance as _next_boundary): accumulated fp drift
+        # can land t_h a few ulps below a band edge that is not exactly
+        # representable (e.g. 43/3 h), and sampling at t_h then applies
+        # the previous band to the whole following segment
+        h_in, t_in = (h + 1e-9) % 24.0, t_h + 1e-9
+        band = bands.band_at(h_in)
         b = bands.background(band)
-        cf = carbon_sig.at(t_h)
+        cf = carbon_sig.at(t_in)
         ctx = SchedulingContext(
-            hour_of_day=h, band=band, background=b,
+            hour_of_day=h_in, band=band, background=b,
             carbon_factor=cf,
-            price_usd_per_kwh=price.at(t_h) if price is not None else 0.0,
+            price_usd_per_kwh=price.at(t_in) if price is not None else 0.0,
             elapsed_h=t_h - start_hour,
             progress=1.0 - remaining / n_total,
             deadline_h=deadline_h)

@@ -312,6 +312,87 @@ def test_price_none_leaves_cost_none(calibrated):
 
 
 # ---------------------------------------------------------------------------
+# Satellite: mixed-resolution sweeps in one process (PR-2 memo-cache audit).
+# The sph-keyed caches (_bg_table) were fine, but the closed-form profile
+# path crashed on sub-hour band edges (periodic_decision_profile sampled
+# through the hourly-only _band_table) and mixed-resolution batches used
+# max() instead of lcm() to pick the shared grid.
+# ---------------------------------------------------------------------------
+def test_sub_hour_band_edges_on_trace_path(calibrated):
+    """Band policies with sub-hour edges route to the trace grid and match
+    the sequential simulator (used to raise the periodic engine's
+    'cannot represent sub-hour band edges' ValueError)."""
+    wl, m = calibrated
+    bands = TimeBands(peak=((14.5, 19),),
+                      load_sensitive=((11, 14.5), (19, 21)))
+    r = sweep([SweepCase(PEAK_AWARE_BOOSTED, wl, m, bands=bands)])[0]
+    seq = simulate_campaign(wl, PEAK_AWARE_BOOSTED, m, bands=bands)
+    assert abs(r.energy_kwh / seq.energy_kwh - 1) < 1e-9
+    assert abs(r.runtime_h / seq.runtime_h - 1) < 1e-9
+
+
+def test_hourly_profile_still_rejects_sub_hour_bands(calibrated):
+    """The periodic-only helper keeps its guard: sampling sub-hour band
+    edges on an incompatible grid raises instead of silently aliasing
+    the edge onto the previous band (docs/API.md migration note)."""
+    from repro.core import hourly_profile
+    bands = TimeBands(peak=((14.5, 19),),
+                      load_sensitive=((11, 14.5), (19, 21)))
+    with pytest.raises(ValueError, match="alias|band edges"):
+        hourly_profile(PEAK_AWARE_BOOSTED, bands, GridCarbonModel())
+
+
+def test_mixed_resolution_sweeps_in_one_process(calibrated):
+    """Alternating grid resolutions through the same memoization caches:
+    hourly, half-hour, hourly again, quarter-hour — every sweep must
+    match its own sequential run (a cache key ignoring slots_per_hour
+    would replay the wrong resolution's tables)."""
+    wl, m = calibrated
+    half = TimeBands(peak=((14.5, 19),),
+                     load_sensitive=((11, 14.5), (19, 21)))
+    quarter = TimeBands(peak=((14.25, 19),),
+                        load_sensitive=((11, 14.25), (19, 21)))
+    for bands in (TimeBands(), half, TimeBands(), quarter, half):
+        r = sweep([SweepCase(PEAK_AWARE_BOOSTED, wl, m, bands=bands)])[0]
+        seq = simulate_campaign(wl, PEAK_AWARE_BOOSTED, m, bands=bands)
+        assert abs(r.energy_kwh / seq.energy_kwh - 1) < 1e-9, bands.peak
+
+
+def test_mixed_resolutions_in_one_batch_use_lcm_grid(calibrated):
+    """One sweep() call mixing a half-hour case and a third-hour case:
+    the shared trace grid must refine to lcm (6 slots/hour), not max."""
+    wl, m = calibrated
+    half = TimeBands(peak=((14.5, 19),),
+                     load_sensitive=((11, 14.5), (19, 21)))
+    third = TimeBands(peak=((43.0 / 3.0, 19),),
+                      load_sensitive=((11, 43.0 / 3.0), (19, 21)))
+    cases = [SweepCase(PEAK_AWARE_BOOSTED, wl, m, bands=half),
+             SweepCase(PEAK_AWARE_BOOSTED, wl, m, bands=third)]
+    res = sweep(cases)
+    for case, r in zip(cases, res):
+        seq = simulate_campaign(wl, PEAK_AWARE_BOOSTED, m, bands=case.bands)
+        assert abs(r.energy_kwh / seq.energy_kwh - 1) < 1e-9
+
+
+def test_sub_hour_parametric_schedule_forces_trace_dispatch(calibrated):
+    """The dispatcher hook: a 48-slot ParametricSchedule advertises
+    half-hour change hours, so its case needs slots_per_hour=2 and the
+    trace path — sampling it hourly would alias away every second slot."""
+    from repro.core.engine import case_slots_per_hour
+    from repro.core.schedule import ParametricSchedule
+    wl, m = calibrated
+    ps = ParametricSchedule.from_intensities(
+        [0.3 + 0.5 * math.sin(2 * math.pi * i / 48) ** 2 for i in range(48)],
+        name="p48")
+    case = SweepCase(ps, wl, m)
+    assert case_slots_per_hour(case) == 2
+    r = sweep([case])[0]
+    seq = simulate_campaign(wl, ps, m)
+    assert abs(r.energy_kwh / seq.energy_kwh - 1) < 1e-9
+    assert abs(r.runtime_h / seq.runtime_h - 1) < 1e-9
+
+
+# ---------------------------------------------------------------------------
 # deadline_schedule behaviour
 # ---------------------------------------------------------------------------
 def test_deadline_schedule_paces_toward_deadline(calibrated):
