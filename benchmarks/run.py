@@ -7,6 +7,10 @@ roofline/kernel benches.  Prints ``name,us_per_call,derived`` CSV rows.
   trace_sweep            trace-grid JAX scan vs sequential simulation on a
                          7-day carbon trace at S in {10, 120, 1000} cases
                          (core/engine_jax.py)
+  ensemble_sweep         chunked resumable scan + carbon ensembles: S x E
+                         scenarios/sec, chunked-vs-monolithic wasted-work
+                         ratio on a mixed-finish S=1000 batch, jit-recompile
+                         count across repeated sweeps
   optimize_sweep         schedule-optimizer objective throughput: one jitted
                          population step (256+ candidates/call) vs the NumPy
                          loop backend, plus end-to-end Campaign.optimize
@@ -166,6 +170,81 @@ def trace_sweep():
          f"speedup={t_seq / t_vec:.1f}x")
 
 
+def ensemble_sweep():
+    """Chunked trace engine + carbon-ensemble benchmarks (acceptance:
+    the straggler re-scan is gone — >=3x reduction in scanned slot-work
+    on a mixed-finish S=1000 batch — and repeated sweeps reuse the
+    jitted chunk kernel instead of recompiling per shape).
+
+    Rows: S x E ensemble scenario throughput; chunked-vs-monolithic
+    slot-work ratio; jit-recompile count across repeated sweeps of
+    varying batch sizes (bucketed padding keeps the signature set
+    small)."""
+    from repro.core import (MachineProfile, SweepCase, calibrate_workload,
+                            hourly_schedule, trace_windows)
+    from repro.core.engine_jax import (_HAS_JAX, reset_scan_stats,
+                                       scan_stats, trace_sweep as run_trace)
+    from repro.core.workload import OEM_CASE_1
+
+    backend = "jax" if _HAS_JAX else "numpy"
+    wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+
+    # --- S x E ensemble throughput -------------------------------------
+    rng = np.random.RandomState(7)
+    h = np.arange(24 * 7 * 7)
+    series = 0.448 * (1.0 + 0.30 * np.sin(2 * np.pi * h / 24.0)
+                      + 0.08 * np.sin(2 * np.pi * h / (24 * 7))
+                      + 0.05 * rng.randn(len(h)))
+    for S, E in ((32, 32), (120, 16)):
+        ens = trace_windows(series, window_h=24 * 14, stride_h=24)
+        assert len(ens) >= E, len(ens)
+        ens = type(ens)(ens.members[:E], name=f"ens{E}")
+        scheds = [hourly_schedule(f"e{i}",
+                                  [0.3 + 0.65 * ((3 * i + hh) % 24) / 23
+                                   for hh in range(24)]) for i in range(S)]
+        cases = [SweepCase(s, wl, m, carbon=ens) for s in scheds]
+        run_trace(cases, backend=backend)     # warm tables + jit cache
+        t0 = time.perf_counter()
+        res = run_trace(cases, backend=backend)
+        dt = time.perf_counter() - t0
+        emit(f"ensemble_sweep/{backend}_S{S}xE{E}", dt * 1e6 / (S * E),
+             f"total_ms={dt * 1e3:.1f}_scenarios_per_s={S * E / dt:.0f}_"
+             f"co2_std={res[0].co2_ensemble.std:.3f}")
+
+    # --- chunked vs monolithic wasted work, mixed-finish S=1000 --------
+    S = 1000
+    scheds = [hourly_schedule(f"fast{i}",
+                              [0.75 + 0.2 * ((i + hh) % 24) / 23
+                               for hh in range(24)]) for i in range(S - 20)]
+    scheds += [hourly_schedule(f"slow{i}", [0.12] * 24) for i in range(20)]
+    cases = [SweepCase(s, wl, m) for s in scheds]
+    for mode in ("chunked", "monolithic"):
+        run_trace(cases, backend=backend, mode=mode)   # warm jit + plans
+        reset_scan_stats()
+        t0 = time.perf_counter()
+        run_trace(cases, backend=backend, mode=mode)
+        dt = time.perf_counter() - t0
+        st = scan_stats()
+        if mode == "chunked":
+            work_chunked, t_chunked = st.slot_work, dt
+        else:
+            emit(f"ensemble_sweep/{backend}_straggler_S{S}",
+                 t_chunked * 1e6 / S,
+                 f"chunked_ms={t_chunked * 1e3:.0f}_mono_ms={dt * 1e3:.0f}_"
+                 f"slot_work_ratio={st.slot_work / work_chunked:.1f}x_"
+                 f"(bar>=3x)")
+
+    # --- jit-recompile count across repeated, jittered sweeps ----------
+    reset_scan_stats()
+    for S in (64, 63, 61, 57, 49):            # same pow2 bucket: one shape
+        sub = [SweepCase(s, wl, m) for s in scheds[:S]]
+        run_trace(sub, backend=backend)
+    st = scan_stats()
+    emit(f"ensemble_sweep/{backend}_recompiles", 0.0,
+         f"sweeps=5_jit_shapes={st.jit_compiles}_chunks={st.chunks}_"
+         "(bucketed_padding_keeps_shapes_constant)")
+
+
 def optimize_sweep():
     """Schedule-optimizer throughput (acceptance bar: a single jitted
     population step evaluates >=256 candidates; report candidates/sec for
@@ -310,6 +389,7 @@ BENCHES = {
     "fig1_policy_frontier": fig1_policy_frontier,
     "frontier_sweep": frontier_sweep,
     "trace_sweep": trace_sweep,
+    "ensemble_sweep": ensemble_sweep,
     "optimize_sweep": optimize_sweep,
     "oem_case_studies": oem_case_studies,
     "campaign_projection": campaign_projection,

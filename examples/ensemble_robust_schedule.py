@@ -1,0 +1,95 @@
+"""Plan against a carbon *ensemble*, not one forecast.
+
+The carbon-aware workflow literature is blunt about single-trace
+evaluations: savings estimates only mean something across many trace
+windows.  This example slices six weeks of synthetic grid history into
+an ensemble of overlapping two-week windows (`carina.trace_windows`),
+sweeps the fixed policies against all members in one scan — every row
+gets a mean ± spread instead of a point estimate — and then synthesizes
+two schedules with `Campaign.optimize`: one minimizing *expected* CO2
+(`robust="mean"`) and one minimizing the CVaR tail (`robust="cvar"`,
+the mean of the worst 10% of carbon scenarios).  The CVaR schedule
+gives up a little average CO2 to cut its bad-week exposure.
+
+    PYTHONPATH=src python examples/ensemble_robust_schedule.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import repro.carina as carina
+
+FAST = bool(os.environ.get("CARINA_EXAMPLE_FAST"))   # CI smoke mode
+
+
+def grid_history(weeks: int = 6) -> np.ndarray:
+    """Synthetic hourly kg-CO2e/kWh history: diurnal swing, a weekly
+    cycle, a slow seasonal drift, and weather-like noise."""
+    h = np.arange(weeks * 7 * 24)
+    rng = np.random.RandomState(11)
+    return carina.DTE_FACTOR * (1.0
+                                + 0.30 * np.sin(2 * np.pi * h / 24.0)
+                                + 0.10 * np.sin(2 * np.pi * h / 168.0)
+                                + 0.06 * np.cos(2 * np.pi * h / (weeks * 168))
+                                + 0.07 * rng.randn(h.size))
+
+
+def fmt(r) -> str:
+    s = r.co2_ensemble
+    return (f"{r.runtime_h:6.1f} h  {r.energy_kwh:5.1f} kWh  "
+            f"CO2 {s.mean:5.2f} ±{s.std:.2f} kg  "
+            f"[q05 {s.q05:.2f} .. q95 {s.q95:.2f}]")
+
+
+def main():
+    ensemble = carina.trace_windows(grid_history(), window_h=24 * 14,
+                                    stride_h=24, name="history")
+    if FAST:
+        ensemble = carina.SignalEnsemble(ensemble.members[::2],
+                                         name="history")
+    print(f"=== {len(ensemble)} two-week carbon windows from six weeks of "
+          "grid history\n")
+
+    campaign = carina.Campaign(carina.OEM_CASE_1)
+    six = campaign.sweep(list(carina.POLICIES.values()),
+                         carbon_ensemble=ensemble)
+    deadline = max(r.runtime_h for r in six)
+    print(f"=== fixed Figure-1 policies across all members "
+          f"(deadline {deadline:.0f} h)")
+    for r in sorted(six, key=lambda r: r.co2_kg):
+        print(f"  {r.policy:32s} {fmt(r)}")
+
+    kw = (dict(candidates=48, iterations=6, steps=40) if FAST
+          else dict(candidates=192, iterations=24, steps=300))
+    method = "auto"
+    results = {}
+    for robust in ("mean", "cvar"):
+        t0 = time.perf_counter()
+        opt = campaign.optimize("co2", deadline_h=deadline,
+                                carbon_ensemble=ensemble, robust=robust,
+                                method=method, **kw)
+        dt = time.perf_counter() - t0
+        results[robust] = opt
+        print(f"\n=== {opt.result.policy} ({opt.method}, "
+              f"{opt.evaluations} evaluations, {dt:.1f} s)")
+        print(f"  {fmt(opt.result)}")
+
+    mean_tail = np.sort(results['mean'].co2_ensemble)[-3:].mean()
+    cvar_tail = np.sort(results['cvar'].co2_ensemble)[-3:].mean()
+    print(f"\n  worst-3-window CO2: mean-objective {mean_tail:.2f} kg, "
+          f"cvar-objective {cvar_tail:.2f} kg")
+    if cvar_tail < mean_tail - 1e-3:
+        print("  (the CVaR schedule trades a sliver of average CO2 for a "
+              "flatter bad-scenario tail)")
+    else:
+        print("  (on this ensemble the expected-CO2 optimum already has a "
+              "flat tail, so both objectives agree — spikier histories "
+              "separate them)")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,9 +24,12 @@ from repro.core import (  # noqa: F401
     BASELINE, PEAK_AWARE_BOOSTED, PEAK_AWARE_AGGRESSIVE, LOW_PRIORITY_ONLY,
     SMALL_BATCHES, LARGE_BATCHES, POLICIES,
     # signals
-    Signal, SignalSet, BandSignal, ConstantSignal, HourlySignal, TOU_PRICE,
-    TraceSignal, as_trace, background_signal, carbon_signal, default_signals,
-    is_periodic_24h, sample_signal,
+    Signal, SignalEnsemble, SignalSet, BandSignal, ConstantSignal,
+    HourlySignal, TOU_PRICE, TraceSignal, as_ensemble, as_trace,
+    background_signal, carbon_signal, default_signals, is_periodic_24h,
+    sample_signal, trace_windows,
+    # ensemble reporting
+    EnsembleStats, ensemble_stats,
     # time structure + models
     BANDS, TimeBands, GridCarbonModel, MIDWEST_HOURLY, DTE_FACTOR,
     ChipProfile, EnergyModel, MachineProfile, StepCost,
@@ -46,7 +49,10 @@ from repro.core import (  # noqa: F401
 
 
 _LAZY = ("trace_sweep", "TraceObjective", "EvalMetrics", "evaluate_params",
-         "Objective", "OptimizeResult", "optimize_schedule", "pareto_front")
+         "SweepPlan", "compile_plan", "execute_plan", "summarize_plan",
+         "ScanStats", "scan_stats", "reset_scan_stats",
+         "Objective", "OptimizeResult", "optimize_schedule", "pareto_front",
+         "reduce_ensemble", "ROBUST_MODES")
 
 
 def __getattr__(name):

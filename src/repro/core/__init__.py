@@ -26,11 +26,13 @@ from repro.core.schedule import (DeadlineSchedule, Decision,  # noqa: F401
                                  progress_ramp_schedule)
 from repro.core.session import Campaign, CampaignReport  # noqa: F401
 from repro.core.signal import (TOU_PRICE, BandSignal, ConstantSignal,  # noqa: F401
-                               HourlySignal, Signal, SignalSet, TraceSignal,
-                               as_trace, background_signal, carbon_signal,
+                               HourlySignal, Signal, SignalEnsemble,
+                               SignalSet, TraceSignal, as_ensemble, as_trace,
+                               background_signal, carbon_signal,
                                default_signals, is_periodic_24h,
-                               sample_signal)
-from repro.core.simulator import (SimResult, calibrate_workload,  # noqa: F401
+                               sample_signal, trace_windows)
+from repro.core.simulator import (EnsembleStats, SimResult,  # noqa: F401
+                                  calibrate_workload, ensemble_stats,
                                   fill_deltas, policy_frontier,
                                   simulate_campaign, simulate_campaign_exact)
 from repro.core.tracker import (RunSummary, RunTracker, UnitRecord,  # noqa: F401
@@ -49,10 +51,19 @@ _LAZY = {
     "TraceObjective": "repro.core.engine_jax",
     "EvalMetrics": "repro.core.engine_jax",
     "evaluate_params": "repro.core.engine_jax",
+    "SweepPlan": "repro.core.engine_jax",
+    "compile_plan": "repro.core.engine_jax",
+    "execute_plan": "repro.core.engine_jax",
+    "summarize_plan": "repro.core.engine_jax",
+    "ScanStats": "repro.core.engine_jax",
+    "scan_stats": "repro.core.engine_jax",
+    "reset_scan_stats": "repro.core.engine_jax",
     "Objective": "repro.core.optimize",
     "OptimizeResult": "repro.core.optimize",
     "optimize_schedule": "repro.core.optimize",
     "pareto_front": "repro.core.optimize",
+    "reduce_ensemble": "repro.core.optimize",
+    "ROBUST_MODES": "repro.core.optimize",
 }
 
 

@@ -13,9 +13,11 @@ Two vectorized paths sit behind one `sweep()` entry point:
 
   * the **trace-grid path** (core/engine_jax.py): anything the periodic
     grid cannot represent — progress/elapsed-aware schedules, non-periodic
-    multi-day `TraceSignal`s, sub-hour band edges — is stepped hour by
-    hour with a jit-compiled `jax.lax.scan` (NumPy fallback) that carries
-    `(remaining, elapsed)` state.
+    multi-day `TraceSignal`s, carbon ensembles (`SignalEnsemble`),
+    sub-hour band edges — is compiled into a `SweepPlan` and stepped
+    through a chunked resumable `jax.lax.scan` (NumPy fallback) that
+    carries `(remaining, elapsed, accumulator)` state across fixed-shape
+    horizon chunks.
 
 `sweep()` classifies every case and routes it; the per-case probe that
 used to *reject* progress-aware schedules with a ValueError now simply
@@ -252,8 +254,10 @@ def sweep(cases: Sequence[SweepCase],
     Each case is dispatched to the periodic 24-slot path when its
     schedule, bands, and signals are all 24 h-periodic and hour-aligned,
     and to the trace-grid scan engine (core/engine_jax.py) otherwise —
-    progress/elapsed-aware schedules, `TraceSignal` carbon/price, and
-    sub-hour band edges all take the trace path instead of raising.
+    progress/elapsed-aware schedules, `TraceSignal` carbon/price,
+    `SignalEnsemble` carbon (E scenario members per scan, summarized as
+    mean + `EnsembleStats`), and sub-hour band edges all take the trace
+    path instead of raising.
 
     `progress_buckets` and `backend` ("jax"/"numpy") tune the trace path.
     """

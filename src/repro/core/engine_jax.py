@@ -1,46 +1,72 @@
-"""Trace-grid sweep engine: a jit-compiled `jax.lax.scan` over a fine
-hourly time grid, vmapped across cases as batched (S,)-vectors.
+"""Trace-grid sweep engine: compile -> execute -> summarize.
 
 The periodic 24-slot engine (core/engine.py) collapses a campaign into
 one repeated day, which is exact only when every decision and signal is
 24 h-periodic and ignorant of campaign position.  This engine instead
 *steps* the campaign hour by hour (or finer, for sub-hour band edges),
-carrying `(remaining, elapsed)` state through the scan, so it natively
-represents everything the periodic grid cannot:
+carrying `(remaining, elapsed, energy/CO2/cost accumulators)` state, so
+it natively represents everything the periodic grid cannot: progress/
+elapsed-aware schedules, non-periodic multi-day `TraceSignal`s, carbon
+**ensembles** (`SignalEnsemble` — E scenario members evaluated in one
+scan), and heterogeneous fleets.
 
-  * progress/elapsed-aware schedules (deadline pace-keepers, progress
-    ramps) via a precompiled per-case decision table over
-    (hour-row, progress-bucket) — the scan picks the row by grid position
-    and the bucket by live progress;
-  * non-periodic multi-day signals (`TraceSignal` grid-carbon forecasts,
-    trace prices) sampled per slot;
-  * heterogeneous fleets: per-case machines, workloads, bands and
-    `start_hour`s batch into the same scan.
+The sweep is staged:
+
+  * **compile** (`compile_plan`) classifies every case exactly once —
+    closed-form day profile, probed decide() lattice, or the vectorized
+    `decide_grid` protocol — and lowers it into a `SweepPlan`: padded
+    decision tables, per-lane physics scalars, day-periodic background
+    tables, and incremental signal grids, all built with batched NumPy.
+    Per-case compilation is memoized by case fingerprint, so repeated
+    sweeps and `Campaign.optimize` warm-start loops do not re-probe or
+    rebuild tables.
+
+  * **execute** (`execute_plan`) runs a *chunked resumable scan*: the
+    horizon is covered by fixed-shape chunks (default 4 days), state is
+    carried across chunks, finished lanes are compacted out of the
+    batch, and unfinished lanes simply get more chunks appended — no
+    slot is ever recomputed (the old engine re-scanned the entire batch
+    from t=0 with a doubled horizon whenever one straggler didn't
+    finish).  Fixed chunk shapes plus bucketed padding of the
+    (lanes, rows, buckets) tables mean the jitted kernel compiles once
+    per bucket signature instead of once per horizon length.
+    `mode="monolithic"` keeps the old single-scan/retry-doubling
+    behaviour for comparison benchmarks (`scan_stats()` counts the
+    slot-work either way).
+
+  * **summarize** (`summarize_plan`) folds the final state into
+    `SimResult`s; ensemble cases get mean CO2 plus full per-member
+    `EnsembleStats`.
 
 Decision tables stay compact: schedules whose decisions are detected (by
 probing) to be hour-of-day-periodic keep 24*sph rows indexed modulo the
-day; progress-free schedules keep a single bucket.  Physics per slot
-comes from the shared rate model (core/model.py) with `xp=jnp`.
+day; progress-free schedules keep a single bucket; elapsed-aware
+schedules get their table rows built chunk by chunk, never for slots
+already scanned.  Physics per slot comes from the shared rate model
+(core/model.py) with `xp=jnp`.
 
 JAX is optional: with `backend="numpy"` (or when JAX is absent, following
 the repro/compat.py guard pattern) the identical scan runs as a NumPy
-loop over the grid — still vectorized across cases, just not jitted.
+loop over the grid — still vectorized across lanes, just not jitted.
 JAX runs under `enable_x64` so both backends agree to float64 precision
 with the periodic engine on periodic cases.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
-from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Set, Tuple)
 
 import numpy as np
 
 from repro.core import model
 from repro.core.carbon import GridCarbonModel
 from repro.core.schedule import SchedulingContext, as_schedule
-from repro.core.signal import Signal, carbon_signal, sample_signal
-from repro.core.simulator import SimResult
+from repro.core.signal import (Signal, SignalEnsemble, carbon_signal,
+                               sample_signal)
+from repro.core.simulator import SimResult, ensemble_stats
 
 try:                                    # JAX is optional on the trace path
     import jax
@@ -54,6 +80,54 @@ except Exception:                       # pragma: no cover - env without jax
 
 _PROBE_PROGRESS = (0.0, 1.0 / 3.0, 2.0 / 3.0, 0.999)
 _PROBE_OFFSETS = (0.0, 3.0, 5.0, 9.0, 13.0, 17.0, 21.0)
+
+#: Chunk length of the resumable scan, in days.  One compiled kernel
+#: shape serves every campaign length; stragglers just get more chunks.
+DEFAULT_CHUNK_DAYS = 4
+
+#: Fraction of a case's workload that must complete per scanned day for
+#: the case to count as progressing (zero-intensity schedules leak a
+#: ~1e-10/day numerical trickle through the rate floor, real schedules
+#: complete orders of magnitude more).
+_STALL_FRAC_PER_DAY = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Scan statistics: benchmarks (and curious users) read these to see how
+# much slot-work a sweep actually executed and how often the jitted
+# chunk kernel saw a brand-new shape signature.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ScanStats:
+    """Counters over every scan executed since the last reset."""
+    slot_work: int = 0            # scan-lane x slot units executed
+    chunks: int = 0               # kernel launches
+    plan_hits: int = 0            # per-case compile cache hits
+    plan_misses: int = 0
+    jit_shapes: Set[tuple] = dataclasses.field(default_factory=set)
+
+    @property
+    def jit_compiles(self) -> int:
+        """Distinct shape signatures handed to the jitted kernel (each
+        one costs a fresh XLA compile)."""
+        return len(self.jit_shapes)
+
+
+_STATS = ScanStats()
+
+
+def scan_stats() -> ScanStats:
+    """A snapshot copy of the engine's scan counters."""
+    return dataclasses.replace(_STATS, jit_shapes=set(_STATS.jit_shapes))
+
+
+def reset_scan_stats() -> None:
+    """Zero the counters (including the jit-shape signature set)."""
+    _STATS.slot_work = 0
+    _STATS.chunks = 0
+    _STATS.plan_hits = 0
+    _STATS.plan_misses = 0
+    _STATS.jit_shapes = set()
 
 
 @functools.lru_cache(maxsize=256)       # bounded, same policy as engine.py
@@ -83,20 +157,31 @@ def _ctx_factory(case, carbon_sig, price_sig):
     return make
 
 
-def _probe(sched, make_ctx, g0: float, horizon_h: float):
-    """(progress_dep, elapsed_dep, decision_samples) from a coarse lattice.
+class ProbeInfo(NamedTuple):
+    """Dependence classification of one schedule's decide()."""
+    progress_dep: bool
+    elapsed_dep: bool
+    carbon_dep: bool
+    samples: list                 # (t_abs, intensity, batch) lattice points
+
+
+def _probe(sched, make_ctx, g0: float, horizon_h: float) -> ProbeInfo:
+    """Classify a schedule's decide() from a coarse lattice.
 
     `elapsed_dep` is true when the same hour-of-day decides differently on
     different days (a deadline pace, or a schedule following a non-periodic
     carbon trace through ctx.carbon_factor); `progress_dep` when decisions
-    move with ctx.progress.  Exact for the bundled schedule families;
-    arbitrary callables are sampled on the lattice (documented heuristic —
-    a schedule varying only between lattice points can be misclassified).
+    move with ctx.progress; `carbon_dep` when perturbing ctx.carbon_factor
+    alone changes the decision (such schedules need per-member decision
+    tables under a carbon ensemble).  Exact for the bundled schedule
+    families; arbitrary callables are sampled on the lattice (documented
+    heuristic — a schedule varying only between lattice points can be
+    misclassified).
     """
     days = sorted({0.0, 24.0, 48.0,
                    max(math.floor(horizon_h / 48.0) * 24.0, 0.0),
                    max((math.floor(horizon_h / 24.0) - 1) * 24.0, 0.0)})
-    progress_dep = elapsed_dep = False
+    progress_dep = elapsed_dep = carbon_dep = False
     samples = []
     for off in _PROBE_OFFSETS:
         base = None
@@ -104,96 +189,125 @@ def _probe(sched, make_ctx, g0: float, horizon_h: float):
             t_abs = g0 + day_h + off
             if t_abs - g0 > horizon_h + 24.0:
                 continue
-            d0 = sched.decide(make_ctx(t_abs, 0.5))
+            ctx0 = make_ctx(t_abs, 0.5)
+            d0 = sched.decide(ctx0)
             key0 = (d0.intensity, d0.batch_size)
             samples.append((t_abs, d0.intensity, d0.batch_size))
             if base is None:
                 base = key0
             elif key0 != base:
                 elapsed_dep = True
+            if not carbon_dep:
+                dc = sched.decide(dataclasses.replace(
+                    ctx0, carbon_factor=ctx0.carbon_factor * 1.5 + 0.05))
+                if (dc.intensity, dc.batch_size) != key0:
+                    carbon_dep = True
             for p in _PROBE_PROGRESS:
                 dp = sched.decide(make_ctx(t_abs, p))
                 if (dp.intensity, dp.batch_size) != key0:
                     progress_dep = True
                     samples.append((t_abs, dp.intensity, dp.batch_size))
-    return progress_dep, elapsed_dep, samples
+    return ProbeInfo(progress_dep, elapsed_dep, carbon_dep, samples)
 
 
-def _table_depends_on_t(sched, prof, probe) -> bool:
-    """True when the case's decision table has T rows (and so must be
-    rebuilt if the retry loop grows the horizon)."""
-    if prof is not None:
-        return False
-    if hasattr(sched, "decide_grid"):
-        return True
-    return probe[1]                      # elapsed_dep
+def _case_g0(case, sph: int) -> float:
+    return math.floor(case.start_hour * sph) / sph
 
 
-def _case_tables(case, carbon_sig, price_sig, sph: int, T: int, B: int,
-                 prof, probe) -> Tuple[np.ndarray, np.ndarray, bool]:
-    """Decision table (u_rows, batch_rows) of shape (R, B_i) plus a flag:
-    periodic tables have R = 24*sph rows indexed modulo the day; full
-    tables have R = T rows indexed by grid slot.  `prof` (closed-form
-    24 h profile or None) and `probe` (dependence classification) are
-    computed once per case by the caller — probing costs ~10^2 decide()
-    calls and must not repeat per retry."""
-    sched = as_schedule(case.schedule)
+def _grid_ctx(case, carbon_sig, price_sig, sph: int, t_abs: np.ndarray,
+              B_i: int) -> SchedulingContext:
+    """Array SchedulingContext over absolute hours `t_abs` for the
+    vectorized `decide_grid` protocol (shape (T, 1) x (1, B))."""
     H = 24 * sph
-    if prof is not None:                 # bundled Policy/HourlyPolicy,
-        u_rows, b_rows = prof            # already sampled at sph resolution
-        return (u_rows[:, None].astype(float),
-                b_rows[:, None].astype(float), True)
+    rows = np.floor(t_abs * sph + 1e-9).astype(int) % H
+    centers = (np.arange(B_i) + 0.5) / B_i
+    return SchedulingContext(
+        hour_of_day=t_abs[:, None] % 24.0, band="",
+        background=_bg_table(case.bands, sph)[rows][:, None],
+        carbon_factor=sample_signal(carbon_sig, t_abs)[:, None],
+        price_usd_per_kwh=(sample_signal(price_sig, t_abs)[:, None]
+                           if price_sig is not None else 0.0),
+        elapsed_h=np.maximum(t_abs - case.start_hour, 0.0)[:, None],
+        progress=centers[None, :], deadline_h=case.deadline_h)
 
-    g0 = math.floor(case.start_hour * sph) / sph
-    if hasattr(sched, "decide_grid"):
-        # vectorized decision protocol: the whole (T, B) table in one call
-        t_abs = g0 + np.arange(T) / sph
-        s0 = int(round(g0 * sph)) % H
-        centers = (np.arange(B) + 0.5) / B
-        ctx = SchedulingContext(
-            hour_of_day=t_abs[:, None] % 24.0, band="",
-            background=_bg_table(case.bands, sph)[
-                (s0 + np.arange(T)) % H][:, None],
-            carbon_factor=sample_signal(carbon_sig, t_abs)[:, None],
-            price_usd_per_kwh=(sample_signal(price_sig, t_abs)[:, None]
-                               if price_sig is not None else 0.0),
-            elapsed_h=np.maximum(t_abs - case.start_hour, 0.0)[:, None],
-            progress=centers[None, :], deadline_h=case.deadline_h)
-        u, b = sched.decide_grid(ctx)
-        return (np.broadcast_to(np.asarray(u, dtype=float), (T, B)).copy(),
-                np.broadcast_to(np.asarray(b, dtype=float), (T, B)).copy(),
-                False)
 
-    make_ctx = _ctx_factory(case, carbon_sig, price_sig)
-    progress_dep, elapsed_dep, _ = probe
+def _day_table(case, sched, probe: Optional[ProbeInfo], carbon_sig,
+               price_sig, sph: int, B: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Periodic decision table of shape (24*sph, B_i) for a schedule whose
+    decide() was probed hour-of-day-periodic (rows are indexed modulo the
+    day; each row is sampled at its first occurrence on the grid)."""
+    H = 24 * sph
+    g0 = _case_g0(case, sph)
+    hod = np.arange(H) / sph
+    t_abs = g0 + ((hod - g0) % 24.0)     # first occurrence of each row
+    progress_dep = probe.progress_dep if probe is not None else False
     B_i = B if progress_dep else 1
-    if elapsed_dep:
-        rows = T
-        t_abs = g0 + np.arange(T) / sph
-    else:
-        rows = H
-        hod = np.arange(H) / sph
-        t_abs = g0 + ((hod - g0) % 24.0)   # first occurrence of each row
-    u_rows = np.empty((rows, B_i))
-    b_rows = np.empty((rows, B_i))
-    for ri in range(rows):
-        t = float(t_abs[ri])
+    if hasattr(sched, "decide_grid"):
+        u, b = sched.decide_grid(_grid_ctx(case, carbon_sig, price_sig, sph,
+                                           t_abs, B_i))
+        return (np.broadcast_to(np.asarray(u, dtype=float), (H, B_i)).copy(),
+                np.broadcast_to(np.asarray(b, dtype=float), (H, B_i)).copy())
+    make_ctx = _ctx_factory(case, carbon_sig, price_sig)
+    u_rows = np.empty((H, B_i))
+    b_rows = np.empty((H, B_i))
+    for ri in range(H):
         for bi in range(B_i):
             p = (bi + 0.5) / B_i if progress_dep else 0.0
-            d = sched.decide(make_ctx(t, p))
+            d = sched.decide(make_ctx(float(t_abs[ri]), p))
             u_rows[ri, bi] = d.intensity
             b_rows[ri, bi] = d.batch_size
-    return u_rows, b_rows, not elapsed_dep
+    return u_rows, b_rows
 
 
-def _estimate_hours(case, prof, probe, max_hours: float,
-                    sph: int = 1) -> float:
-    """Campaign-duration estimate sizing the scan grid.
+def _chunk_table_builder(case, sched, probe: ProbeInfo, carbon_sig,
+                         price_sig, sph: int, B: int) -> Callable:
+    """builder(t0_slot, C) -> (u, b) of shape (C, B_i) for an
+    elapsed-aware schedule: decision rows for global grid slots
+    [t0, t0 + C) only — slots already scanned are never re-decided."""
+    g0 = _case_g0(case, sph)
+    # decide_grid schedules always get the full progress axis: the grid
+    # call is vectorized (extra buckets are nearly free) and the probe
+    # lattice must not flatten a progress window it happened to miss —
+    # only probed decide() schedules, where buckets cost B Python calls
+    # per row, use the probe's progress classification
+    B_i = B if (probe.progress_dep or hasattr(sched, "decide_grid")) else 1
+    if hasattr(sched, "decide_grid"):
+        def build_grid(t0_slot: int, C: int):
+            t_abs = g0 + (t0_slot + np.arange(C)) / sph
+            u, b = sched.decide_grid(_grid_ctx(case, carbon_sig, price_sig,
+                                               sph, t_abs, B_i))
+            return (np.broadcast_to(np.asarray(u, dtype=float),
+                                    (C, B_i)).copy(),
+                    np.broadcast_to(np.asarray(b, dtype=float),
+                                    (C, B_i)).copy())
+        return build_grid
+
+    make_ctx = _ctx_factory(case, carbon_sig, price_sig)
+
+    def build_loop(t0_slot: int, C: int):
+        u_rows = np.empty((C, B_i))
+        b_rows = np.empty((C, B_i))
+        for ri in range(C):
+            t = g0 + (t0_slot + ri) / sph
+            for bi in range(B_i):
+                p = (bi + 0.5) / B_i if probe.progress_dep else 0.0
+                d = sched.decide(make_ctx(t, p))
+                u_rows[ri, bi] = d.intensity
+                b_rows[ri, bi] = d.batch_size
+        return u_rows, b_rows
+
+    return build_loop
+
+
+def _estimate_hours(case, prof, probe: Optional[ProbeInfo],
+                    max_hours: float, sph: int = 1) -> float:
+    """Campaign-duration estimate (sizes the monolithic scan grid; the
+    chunked executor doesn't need it — it just appends chunks).
 
     Near-exact for periodic progress-free tables (one day's throughput is
     computable up front); conservative — slowest sampled decision — for
-    decide()-probed schedules.  The scan retries with a doubled horizon
-    if it undershoots."""
+    decide()-probed schedules."""
     sched = as_schedule(case.schedule)
     bg_day = _bg_table(case.bands, sph)
     if prof is not None:                 # (24*sph,) day profile
@@ -205,7 +319,7 @@ def _estimate_hours(case, prof, probe, max_hours: float,
             return max_hours
         dur = case.workload.n_scenarios / day_scen * 24.0
         return min(dur * 1.02 + 28.0, max_hours)
-    samples = probe[2]
+    samples = probe.samples
     u = np.array([s[1] for s in samples])
     b = np.array([s[2] for s in samples])
     bg = bg_day[np.floor([(s[0] % 24.0) * sph for s in samples]).astype(int)]
@@ -225,9 +339,392 @@ def _estimate_hours(case, prof, probe, max_hours: float,
 
 
 # ---------------------------------------------------------------------------
-# The scan itself, in both backends.  State: (remaining, runtime_s, kwh,
-# co2, cost); per-slot inputs: decision-table row index, background,
-# carbon factor, price, slot length.
+# Case compilation: classify once, cache by fingerprint.
+# ---------------------------------------------------------------------------
+class _CaseCompiled(NamedTuple):
+    """Everything expensive about one case, computed exactly once."""
+    prof: Optional[Tuple[np.ndarray, np.ndarray]]   # closed-form day profile
+    probe: Optional[ProbeInfo]
+    table: Optional[Tuple[np.ndarray, np.ndarray]]  # periodic (H, B_i) rows
+    periodic: bool        # True: rowidx wraps mod day; False: chunk-built
+    carbon_dep: bool      # decisions consult live carbon (ensemble expansion)
+    est_h: float          # duration estimate for the monolithic mode
+    stalled: bool = False  # provably never finishes (zero day throughput)
+
+
+def _table_stalled(case, table: Tuple[np.ndarray, np.ndarray],
+                   sph: int) -> bool:
+    """True when a day-periodic decision table provably never finishes:
+    one full day at campaign start (progress-bucket 0) completes a
+    negligible fraction of the workload, and the table repeats forever.
+    Catches zero-intensity schedules at compile time instead of after a
+    scan to max_days."""
+    u_rows, b_rows = table
+    r = model.campaign_rates(u_rows[:, 0], b_rows[:, 0],
+                             _bg_table(case.bands, sph), case.workload,
+                             case.machine, xp=np)
+    day_scen = float(r.scen_per_s.sum()) * 3600.0 / sph
+    return day_scen <= _STALL_FRAC_PER_DAY * case.workload.n_scenarios
+
+
+_PLAN_CACHE: Dict[tuple, _CaseCompiled] = {}
+_PLAN_CACHE_SIZE = 4096               # entries are ~1 KB (tables + probe)
+
+
+class _Opaque(Exception):
+    """A fingerprint component has no value identity (e.g. a closure)."""
+
+
+_OPAQUE_FROZEN = object()     # memoized "this component is opaque" marker
+
+
+def _freeze(obj):
+    """Recursively lower a fingerprint component to a hashable value:
+    dataclasses by field values, dicts/sequences by sorted/ordered
+    tuples, arrays by bytes.  Raises `_Opaque` for anything without a
+    value identity — plain class instances hash by identity, which says
+    nothing about the *decisions* the object makes (it could mutate, or
+    close over mutable state), so such cases are simply compiled fresh.
+    Every bundled schedule/signal family is a (frozen) dataclass and
+    freezes by value."""
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    if isinstance(obj, np.ndarray):
+        return ("ndarray", obj.dtype.str, obj.shape, obj.tobytes())
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return (type(obj),) + tuple(_freeze(getattr(obj, f.name))
+                                    for f in dataclasses.fields(obj))
+    if isinstance(obj, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in obj.items()))
+    if isinstance(obj, (list, tuple)):
+        return tuple(_freeze(v) for v in obj)
+    try:
+        hash(obj)
+    except TypeError:
+        raise _Opaque from None
+    if type(obj).__hash__ is object.__hash__:   # identity hash only
+        raise _Opaque
+    return obj
+
+
+def _fingerprint(case, price, sph: int, B: int, max_days: int,
+                 memo: Optional[dict] = None) -> Optional[tuple]:
+    """Hashable value identity of one case's compilation inputs, or None
+    when a component is opaque (then the case is compiled fresh).
+
+    `memo` (id -> (obj, frozen)) de-duplicates the freeze of components
+    shared across a batch — a 1000-case sweep over one workload/machine/
+    trace freezes each shared object once, not 1000 times.  The memo
+    keeps the object referenced, so ids cannot be recycled while it
+    lives (one compile_plan call).
+    """
+    def freeze(obj):
+        if memo is None:
+            return _freeze(obj)
+        entry = memo.get(id(obj))
+        if entry is None:
+            try:
+                entry = (obj, _freeze(obj))
+            except _Opaque:
+                entry = (obj, _OPAQUE_FROZEN)
+            memo[id(obj)] = entry
+        if entry[1] is _OPAQUE_FROZEN:
+            raise _Opaque
+        return entry[1]
+
+    try:
+        return (freeze(case.schedule), freeze(case.workload),
+                freeze(case.machine), freeze(case.bands),
+                freeze(case.carbon), case.start_hour, case.deadline_h,
+                freeze(price) if price is not None else None,
+                sph, B, max_days)
+    except _Opaque:
+        return None
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def _compile_case(case, dec_sig, price, sph: int, B: int,
+                  max_hours: float) -> _CaseCompiled:
+    """Classify one case and build whatever table can be built up front.
+    `dec_sig` is the carbon signal decisions see (for an ensemble: the
+    first member — the probe's carbon_dep flag tells us whether the
+    member choice can matter)."""
+    from repro.core.engine import periodic_decision_profile
+    sched = as_schedule(case.schedule)
+    prof = periodic_decision_profile(sched, case.bands, sph)
+    if prof is not None:                 # closed-form: never consults ctx
+        u_rows, b_rows = prof
+        table = (u_rows[:, None].astype(float), b_rows[:, None].astype(float))
+        return _CaseCompiled(prof=prof, probe=None, table=table,
+                             periodic=True, carbon_dep=False,
+                             est_h=_estimate_hours(case, prof, None,
+                                                   max_hours, sph),
+                             stalled=_table_stalled(case, table, sph))
+    probe = _probe(sched, _ctx_factory(case, dec_sig, price),
+                   _case_g0(case, sph), max_hours)
+    est = _estimate_hours(case, None, probe, max_hours, sph)
+    # decide_grid tables are exact per-slot and cheap to rebuild per
+    # chunk, so schedules implementing it only get the compact
+    # day-periodic lowering when they *declare* hour-of-day-only
+    # decisions (`periodic_decisions`, e.g. ParametricSchedule) — the
+    # probe lattice alone must not demote a vectorized schedule whose
+    # elapsed-dependence it happens to miss.  Plain decide() schedules
+    # keep the probe classification (the pre-existing, documented
+    # heuristic).
+    grid_ok = (not hasattr(sched, "decide_grid")
+               or getattr(sched, "periodic_decisions", False))
+    if not probe.elapsed_dep and grid_ok:
+        table = _day_table(case, sched, probe, dec_sig, price, sph, B)
+        return _CaseCompiled(prof=None, probe=probe, table=table,
+                             periodic=True, carbon_dep=probe.carbon_dep,
+                             est_h=est,
+                             stalled=_table_stalled(case, table, sph))
+    return _CaseCompiled(prof=None, probe=probe, table=None, periodic=False,
+                         carbon_dep=probe.carbon_dep, est_h=est)
+
+
+@dataclasses.dataclass
+class SweepPlan:
+    """The compiled form of one trace sweep: everything the chunked scan
+    needs, laid out as batched arrays over scan *lanes*.
+
+    A lane is one scan row: normally one case; a carbon-dependent
+    schedule under an E-member ensemble expands into E lanes (one per
+    member, since each member induces different decisions).  Decision
+    tables are either periodic (`lane_table`, rows indexed modulo the
+    day) or built chunk-by-chunk (`lane_builder`, for elapsed-aware
+    schedules).  `grids` memoizes signal samples per (signal, grid
+    offset): each grid slot is sampled exactly once per plan and
+    extended incrementally as chunks are appended — never re-sampled
+    per retry.
+    """
+    cases: Tuple
+    price: Optional[Signal]
+    sph: int
+    B: int
+    max_days: int
+    E: int                                   # ensemble width (1 = none)
+    case_ensemble: List[Optional[SignalEnsemble]]   # per case
+    case_expanded: List[bool]                # per case: E lanes?
+    lane_case: np.ndarray                    # (L,) case index per lane
+    lane_member: np.ndarray                  # (L,) member driving decisions
+    lane_table: List[Optional[Tuple[np.ndarray, np.ndarray]]]
+    lane_builder: List[Optional[Callable]]
+    lane_periodic: np.ndarray                # (L,) bool (== has a table)
+    tab_u: np.ndarray                        # (L, 24*sph, B_t) stacked tables
+    tab_b: np.ndarray                        # (zero/one rows for chunk-built)
+    tab_buckets: int                         # B_t: 1, or B with progress lanes
+    lane_co2_sigs: List[Tuple[Signal, ...]]  # (E,) carbon signals per lane
+    # per-lane physics scalars, all shape (L,)
+    n_scen: np.ndarray
+    rate: np.ndarray
+    oh: np.ndarray
+    idle: np.ndarray
+    dyn: np.ndarray
+    alpha: np.ndarray
+    gamma: np.ndarray
+    ohfrac: np.ndarray
+    start: np.ndarray
+    g0: np.ndarray
+    s0: np.ndarray
+    bg_day: np.ndarray                       # (L, 24*sph)
+    est_h: float                             # max over cases
+    grids: Dict[tuple, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.lane_case)
+
+    @property
+    def max_slots(self) -> int:
+        return int(self.max_days * 24 * self.sph)
+
+
+class _ScanState(NamedTuple):
+    """Scan accumulators, carried across chunks."""
+    remaining: np.ndarray     # (L,)
+    runtime_s: np.ndarray     # (L,)
+    kwh: np.ndarray           # (L,)
+    co2: np.ndarray           # (L, E)
+    cost: np.ndarray          # (L,)
+
+
+def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
+                 slots_per_hour: int = 1, progress_buckets: int = 32,
+                 max_days: int = 120) -> SweepPlan:
+    """Lower a case batch into a `SweepPlan` (the scan's input form).
+
+    Per-case classification (closed-form profile / probe / decide_grid)
+    is memoized by case fingerprint across calls, so re-sweeping the
+    same cases — or re-evaluating an optimizer's warm-start loop — skips
+    the Python probing entirely.
+    """
+    sph = int(slots_per_hour)
+    B = int(progress_buckets)
+    max_hours = float(max_days) * 24.0
+    H = 24 * sph
+
+    ensembles: List[Optional[SignalEnsemble]] = []
+    for c in cases:
+        ens = c.carbon if isinstance(c.carbon, SignalEnsemble) else None
+        ensembles.append(ens)
+    sizes = {len(e) for e in ensembles if e is not None}
+    if len(sizes) > 1:
+        raise ValueError(
+            f"all carbon ensembles in one sweep must have the same member "
+            f"count; got {sorted(sizes)}")
+    E = sizes.pop() if sizes else 1
+
+    # decision-carbon signal per case: ensemble member 0 stands in for
+    # the ensemble (carbon_dep probing tells us if the choice matters).
+    # Cases on the default grid model share ONE signal object, so the
+    # id-keyed signal-grid dedup fires across the whole batch.
+    default_sig = carbon_signal(GridCarbonModel())
+    dec_sigs = [carbon_signal(ens.member(0)) if ens is not None
+                else (carbon_signal(c.carbon) if c.carbon is not None
+                      else default_sig)
+                for c, ens in zip(cases, ensembles)]
+
+    compiled: List[_CaseCompiled] = []
+    memo: dict = {}
+    for c, sig in zip(cases, dec_sigs):
+        key = _fingerprint(c, price, sph, B, max_days, memo)
+        comp = _PLAN_CACHE.get(key) if key is not None else None
+        if comp is None:
+            comp = _compile_case(c, sig, price, sph, B, max_hours)
+            _STATS.plan_misses += 1
+            if key is not None:
+                if len(_PLAN_CACHE) >= _PLAN_CACHE_SIZE:
+                    for old in list(_PLAN_CACHE)[:_PLAN_CACHE_SIZE // 4]:
+                        del _PLAN_CACHE[old]
+                _PLAN_CACHE[key] = comp
+        else:
+            _STATS.plan_hits += 1
+        if comp.stalled:
+            raise RuntimeError(
+                f"case {c.name()!r} can never finish on the trace grid: one "
+                f"full day of its schedule completes a negligible fraction "
+                f"of {c.workload.n_scenarios:.0f} scenarios and the "
+                "decision table is day-periodic — the schedule is stalled "
+                "at zero intensity")
+        compiled.append(comp)
+
+    # ---- lane layout -----------------------------------------------------
+    lane_case: List[int] = []
+    lane_member: List[int] = []
+    lane_table: List[Optional[Tuple[np.ndarray, np.ndarray]]] = []
+    lane_builder: List[Optional[Callable]] = []
+    lane_periodic: List[bool] = []
+    lane_co2: List[Tuple[Signal, ...]] = []
+    case_expanded: List[bool] = []
+    for i, (c, comp, ens) in enumerate(zip(cases, compiled, ensembles)):
+        sched = as_schedule(c.schedule)
+        expand = ens is not None and comp.carbon_dep
+        case_expanded.append(expand)
+        members = range(E) if expand else (0,)
+        for e in members:
+            lane_case.append(i)
+            lane_member.append(e)
+            if expand:
+                # per-member decisions: rebuild the table (or builder)
+                # against member e's carbon signal
+                sig_e = carbon_signal(ens.member(e))
+                if comp.periodic:
+                    lane_table.append(
+                        comp.table if comp.prof is not None else
+                        _day_table(c, sched, comp.probe, sig_e, price,
+                                   sph, B))
+                    lane_builder.append(None)
+                else:
+                    lane_table.append(None)
+                    lane_builder.append(_chunk_table_builder(
+                        c, sched, comp.probe, sig_e, price, sph, B))
+                # the member's own trace carbonizes every ensemble column
+                # (summarize reads the diagonal lane e / member e)
+                lane_co2.append(tuple(carbon_signal(ens.member(e))
+                                      for _ in range(E)))
+            else:
+                if comp.periodic:
+                    lane_table.append(comp.table)
+                    lane_builder.append(None)
+                else:
+                    lane_table.append(None)
+                    lane_builder.append(_chunk_table_builder(
+                        c, sched, comp.probe, dec_sigs[i], price, sph, B))
+                if ens is not None:
+                    lane_co2.append(tuple(carbon_signal(ens.member(e2))
+                                          for e2 in range(E)))
+                else:
+                    lane_co2.append(tuple(dec_sigs[i] for _ in range(E)))
+            lane_periodic.append(comp.periodic)
+
+    lc = np.asarray(lane_case, dtype=int)
+    wl = [cases[i].workload for i in lane_case]
+    mach = [cases[i].machine for i in lane_case]
+    start = np.array([cases[i].start_hour for i in lane_case], dtype=float)
+    g0 = np.floor(start * sph) / sph
+    # periodic decision tables, stacked once so the per-chunk assembly is
+    # one fancy-index slice instead of a per-lane Python loop
+    L = len(lane_case)
+    B_t = max((t[0].shape[1] for t in lane_table if t is not None),
+              default=1)
+    tab_u = np.zeros((L, H, B_t))
+    tab_b = np.ones((L, H, B_t))
+    for lane, t in enumerate(lane_table):
+        if t is not None:
+            u_r, b_r = t
+            tab_u[lane] = u_r if u_r.shape[1] == B_t \
+                else np.broadcast_to(u_r, (H, B_t))
+            tab_b[lane] = b_r if b_r.shape[1] == B_t \
+                else np.broadcast_to(b_r, (H, B_t))
+    return SweepPlan(
+        cases=tuple(cases), price=price, sph=sph, B=B, max_days=int(max_days),
+        E=E, case_ensemble=ensembles, case_expanded=case_expanded,
+        lane_case=lc, lane_member=np.asarray(lane_member, dtype=int),
+        lane_table=lane_table, lane_builder=lane_builder,
+        lane_periodic=np.asarray(lane_periodic, dtype=bool),
+        tab_u=tab_u, tab_b=tab_b, tab_buckets=B_t,
+        lane_co2_sigs=lane_co2,
+        n_scen=np.array([float(w.n_scenarios) for w in wl]),
+        rate=np.array([w.rate_at_full for w in wl]),
+        oh=np.array([w.batch_overhead_s for w in wl]),
+        idle=np.array([m.idle_w for m in mach]),
+        dyn=np.array([m.dyn_w for m in mach]),
+        alpha=np.array([m.alpha for m in mach]),
+        gamma=np.array([m.gamma for m in mach]),
+        ohfrac=np.array([m.overhead_w_frac for m in mach]),
+        start=start, g0=g0,
+        s0=np.round(g0 * sph).astype(int) % H,
+        bg_day=np.stack([_bg_table(cases[i].bands, sph)
+                         for i in lane_case]),
+        est_h=max(comp.est_h for comp in compiled))
+
+
+# ---------------------------------------------------------------------------
+# Incremental signal grids: every grid slot of every (signal, offset)
+# pair is sampled exactly once per plan; appended chunks only sample the
+# new tail (the old engine re-sampled every signal per case per retry).
+# ---------------------------------------------------------------------------
+def _sig_slice(plan: SweepPlan, sig, g0: float, t0: int,
+               C: int) -> np.ndarray:
+    key = (id(sig), float(g0))
+    vals = plan.grids.get(key)
+    have = 0 if vals is None else len(vals)
+    if have < t0 + C:
+        t_abs = g0 + np.arange(have, t0 + C) / plan.sph
+        tail = sample_signal(sig, t_abs)
+        vals = tail if vals is None else np.concatenate([vals, tail])
+        plan.grids[key] = vals
+    return vals[t0:t0 + C]
+
+
+# ---------------------------------------------------------------------------
+# The scan kernels.  State: (remaining, runtime_s, kwh, co2[(L, E)],
+# cost); per-slot inputs: decision-table row index, background, carbon
+# factors (one per ensemble member), price, slot length.
 # ---------------------------------------------------------------------------
 def _bucket_lookup(xp, u_tab, b_tab, sidx, row, prog, B):
     """Decision at live progress: linear interpolation between the two
@@ -243,47 +740,52 @@ def _bucket_lookup(xp, u_tab, b_tab, sidx, row, prog, B):
     return u, bt
 
 
-def _scan_step_np(state, u_tab, b_tab, row, bg, cf, pr, ln, params, B):
-    remaining, rt, kwh, co2, cost = state
-    (n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac, sidx) = params
-    prog = 1.0 - remaining / n_scen
-    u, bt = _bucket_lookup(np, u_tab, b_tab, sidx, row, prog, B)
-    r = model.rates(u, bt, bg, rate_at_full=rate, batch_overhead_s=oh,
-                    idle_w=idle, dyn_w=dyn, alpha=alpha, gamma=gamma,
-                    overhead_w_frac=ohfrac, xp=np)
-    dt = np.where(remaining > 0.0,
-                  np.minimum(ln, remaining / np.maximum(r.scen_per_s, 1e-30)),
-                  0.0)
-    e = r.kwh_per_s * dt
-    return (remaining - r.scen_per_s * dt, rt + dt, kwh + e,
-            co2 + e * cf, cost + e * pr)
-
-
-def _scan_np(u_tab, b_tab, rowidx, bg, cf, pr, lens, n_scen, rate, oh,
-             idle, dyn, alpha, gamma, ohfrac, B: int):
-    S, T = rowidx.shape
-    params = (n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac,
-              np.arange(S))
-    state = (n_scen.copy(), np.zeros(S), np.zeros(S), np.zeros(S),
-             np.zeros(S))
-    for t in range(T):
-        if not (state[0] > 0.0).any():
+def _scan_chunk_np(u_tab, b_tab, rowidx, bg, cf, pr, lens, state, scalars,
+                   B: int) -> tuple:
+    """One chunk on the NumPy backend: identical arithmetic to the jitted
+    kernel, vectorized across lanes, looped over slots."""
+    remaining, rt, kwh, co2, cost = (a.copy() for a in state)
+    (n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac) = scalars
+    A, C = rowidx.shape
+    sidx = np.arange(A)
+    steps = 0
+    for t in range(C):
+        if not (remaining > 0.0).any():
             break
-        state = _scan_step_np(state, u_tab, b_tab, rowidx[:, t], bg[:, t],
-                              cf[:, t], pr[:, t], lens[:, t], params, B)
-    return state
+        steps += 1
+        prog = 1.0 - remaining / n_scen
+        u, bt = _bucket_lookup(np, u_tab, b_tab, sidx, rowidx[:, t], prog, B)
+        r = model.rates(u, bt, bg[:, t], rate_at_full=rate,
+                        batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
+                        alpha=alpha, gamma=gamma, overhead_w_frac=ohfrac,
+                        xp=np)
+        dt = np.where(
+            remaining > 0.0,
+            np.minimum(lens[:, t],
+                       remaining / np.maximum(r.scen_per_s, 1e-30)),
+            0.0)
+        e = r.kwh_per_s * dt
+        remaining = remaining - r.scen_per_s * dt
+        rt = rt + dt
+        kwh = kwh + e
+        co2 = co2 + e[:, None] * cf[:, :, t]
+        cost = cost + e * pr[:, t]
+    _STATS.slot_work += A * steps
+    return remaining, rt, kwh, co2, cost
 
 
 if _HAS_JAX:
     @functools.partial(jax.jit, static_argnames=("B",))
-    def _scan_jax(u_tab, b_tab, rowidx, bg, cf, pr, lens, n_scen, rate, oh,
-                  idle, dyn, alpha, gamma, ohfrac, B: int):
-        S = u_tab.shape[0]
-        sidx = jnp.arange(S)
+    def _scan_chunk_jax(u_tab, b_tab, rowidx, bg, cf, pr, lens,
+                        remaining, rt, kwh, co2, cost,
+                        n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac,
+                        B: int):
+        A = u_tab.shape[0]
+        sidx = jnp.arange(A)
 
         def step(carry, xs):
             remaining, rt, kwh, co2, cost = carry
-            row, bg_t, cf_t, pr_t, ln = xs
+            row, bg_t, cf_t, pr_t, ln = xs          # cf_t: (A, E)
             prog = 1.0 - remaining / n_scen
             u, bt = _bucket_lookup(jnp, u_tab, b_tab, sidx, row, prog, B)
             r = model.rates(u, bt, bg_t, rate_at_full=rate,
@@ -296,24 +798,318 @@ if _HAS_JAX:
                 0.0)
             e = r.kwh_per_s * dt
             carry = (remaining - r.scen_per_s * dt, rt + dt, kwh + e,
-                     co2 + e * cf_t, cost + e * pr_t)
+                     co2 + e[:, None] * cf_t, cost + e * pr_t)
             return carry, None
 
-        zero = jnp.zeros(S)
-        init = (n_scen, zero, zero, zero, zero)
-        xs = (rowidx.T, bg.T, cf.T, pr.T, lens.T)
+        init = (remaining, rt, kwh, co2, cost)
+        xs = (rowidx.T, bg.T, cf.transpose(2, 0, 1), pr.T, lens.T)
         final, _ = jax.lax.scan(step, init, xs)
         return final
+
+
+def _pad_pow2(n: int, minimum: int = 8) -> int:
+    return max(minimum, 1 << max(n - 1, 0).bit_length())
+
+
+def _run_chunk(plan: SweepPlan, active: np.ndarray, inputs, state_slices,
+               use_jax: bool) -> tuple:
+    """Execute one chunk for the active lanes, padding the batch to
+    bucketed shapes on the JAX backend so repeated sweeps reuse the
+    compiled kernel instead of recompiling per exact size."""
+    u_tab, b_tab, rowidx, bg, cf, pr, lens = inputs
+    A, C = rowidx.shape
+    Bg = u_tab.shape[2]
+    scalars = tuple(arr[active] for arr in
+                    (plan.n_scen, plan.rate, plan.oh, plan.idle, plan.dyn,
+                     plan.alpha, plan.gamma, plan.ohfrac))
+    if not use_jax:
+        out = _scan_chunk_np(u_tab, b_tab, rowidx, bg, cf, pr, lens,
+                             state_slices, scalars, Bg)
+        _STATS.chunks += 1
+        return out
+
+    Ap = _pad_pow2(A)
+    if Ap != A:
+        pad = Ap - A
+
+        def padv(a, fill=0.0):
+            w = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+            return np.pad(a, w, constant_values=fill)
+
+        u_tab, rowidx, bg, cf, pr = (padv(x) for x in
+                                     (u_tab, rowidx, bg, cf, pr))
+        b_tab = padv(b_tab, 1.0)
+        lens = padv(lens, 3600.0 / plan.sph)
+        remaining, rt, kwh, co2, cost = state_slices
+        state_slices = (padv(remaining), padv(rt), padv(kwh), padv(co2),
+                        padv(cost))
+        # safe physics for padded lanes: zero rate, zero power, done
+        n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac = scalars
+        scalars = (padv(n_scen, 1.0), padv(rate), padv(oh), padv(idle),
+                   padv(dyn), padv(alpha, 1.0), padv(gamma),
+                   padv(ohfrac))
+    sig = (Ap, u_tab.shape[1], Bg, C, cf.shape[1], plan.price is not None)
+    _STATS.jit_shapes.add(sig)
+    _STATS.chunks += 1
+    _STATS.slot_work += Ap * C
+    with enable_x64():
+        out = _scan_chunk_jax(
+            *(jnp.asarray(a) for a in (u_tab, b_tab, rowidx, bg, cf, pr,
+                                       lens)),
+            *(jnp.asarray(a) for a in state_slices),
+            *(jnp.asarray(a) for a in scalars), B=Bg)
+    out = tuple(np.asarray(o) for o in out)
+    if Ap != A:
+        out = tuple(o[:A] for o in out)
+    return out
+
+
+def _chunk_inputs(plan: SweepPlan, active: np.ndarray, t0: int,
+                  C: int) -> tuple:
+    """Assemble the per-slot inputs for global slots [t0, t0 + C) of the
+    active lanes: decision tables (padded to a common (R, B) bucket),
+    row indices, background, carbon (per ensemble member), price and
+    slot lengths — all batched NumPy, no per-slot Python."""
+    H = 24 * plan.sph
+    A = active.size
+    slot = t0 + np.arange(C)
+    s_rows = (plan.s0[active][:, None] + slot[None, :]) % H       # (A, C)
+    bg = np.take_along_axis(plan.bg_day[active], s_rows, axis=1)
+    lens = np.full((A, C), 3600.0 / plan.sph)
+    if t0 == 0:
+        lens[:, 0] = (plan.g0[active] + 1.0 / plan.sph
+                      - plan.start[active]) * 3600.0
+
+    # decision tables: periodic lanes come from the plan's precompiled
+    # stack in one fancy-index slice; only chunk-built (elapsed-aware)
+    # lanes pay per-lane Python here — typically the few stragglers
+    has_tab = plan.lane_periodic[active]
+    built_pos = np.flatnonzero(~has_tab)
+    built = [plan.lane_builder[active[p]](t0, C) for p in built_pos]
+    Bg = plan.tab_buckets
+    R = H
+    if built:
+        R = max(R, C)
+        Bg = max(Bg, max(u.shape[1] for u, _ in built))
+    u_tab = np.zeros((A, R, Bg))
+    b_tab = np.ones((A, R, Bg))
+    tab_pos = np.flatnonzero(has_tab)
+    if tab_pos.size:
+        # (n, H, B_t) -> (n, H, Bg): last axis broadcasts when B_t == 1
+        u_tab[tab_pos, :H, :] = plan.tab_u[active[tab_pos]]
+        b_tab[tab_pos, :H, :] = plan.tab_b[active[tab_pos]]
+    for p, (u_r, b_r) in zip(built_pos, built):
+        rows = u_r.shape[0]
+        u_tab[p, :rows] = np.broadcast_to(u_r, (rows, Bg)) \
+            if u_r.shape[1] == 1 else u_r
+        b_tab[p, :rows] = np.broadcast_to(b_r, (rows, Bg)) \
+            if b_r.shape[1] == 1 else b_r
+    rowidx = np.where(has_tab[:, None], s_rows,
+                      np.arange(C)[None, :]).astype(np.int32)
+
+    # signals: one grid lookup + one batched assignment per distinct
+    # (signal, offset) pair, not one per lane
+    cf = np.empty((A, plan.E, C))
+    groups: Dict[tuple, list] = {}
+    for k, lane in enumerate(active):
+        g0 = float(plan.g0[lane])
+        for e, sig in enumerate(plan.lane_co2_sigs[lane]):
+            groups.setdefault((id(sig), g0), []).append((k, e, sig))
+    for (_, g0), members in groups.items():
+        vals = _sig_slice(plan, members[0][2], g0, t0, C)
+        ks = np.fromiter((m[0] for m in members), int, len(members))
+        es = np.fromiter((m[1] for m in members), int, len(members))
+        cf[ks, es] = vals[None, :]
+    if plan.price is not None:
+        pr = np.empty((A, C))
+        pgroups: Dict[float, list] = {}
+        for k, lane in enumerate(active):
+            pgroups.setdefault(float(plan.g0[lane]), []).append(k)
+        for g0, ks in pgroups.items():
+            pr[np.asarray(ks)] = _sig_slice(plan, plan.price, g0,
+                                            t0, C)[None, :]
+    else:
+        pr = np.zeros((A, C))
+    return u_tab, b_tab, rowidx, bg, cf, pr, lens
+
+
+def _stall_diagnostic(plan: SweepPlan, lane: int, remaining: float) -> str:
+    case = plan.cases[plan.lane_case[lane]]
+    return (f"case {case.name()!r} made no progress over a full scanned "
+            f"day on the trace grid (remaining {remaining:.0f} of "
+            f"{plan.n_scen[lane]:.0f} scenarios); its schedule is "
+            "stalled at zero intensity")
+
+
+def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
+                 chunk_days: Optional[int] = None,
+                 mode: str = "chunked") -> _ScanState:
+    """Run the scan over a compiled plan and return the final state.
+
+    `mode="chunked"` (default) is the resumable scan: fixed-shape chunks
+    are appended until every lane finishes, finished lanes are compacted
+    out, and no slot is ever scanned twice.  `mode="monolithic"` keeps
+    the previous engine behaviour — one scan sized by the duration
+    estimate, re-run from t=0 with a doubled horizon on undershoot —
+    for equivalence tests and wasted-work benchmarks.
+
+    Stall detection: provably-dead periodic tables are diagnosed at
+    compile time; beyond that, the chunked executor raises the stall
+    diagnostic as soon as a day-periodic lane completes a full scanned
+    day with zero progress (the monolithic executor can only see
+    zero-progress-from-t=0, so a schedule that stalls mid-campaign
+    still scans to `max_days` there before the generic failure).
+    """
+    if mode not in ("chunked", "monolithic"):
+        raise ValueError(f"unknown mode {mode!r}; use 'chunked' or "
+                         "'monolithic'")
+    if chunk_days is not None and int(chunk_days) < 1:
+        raise ValueError(f"chunk_days must be >= 1, got {chunk_days}")
+    use_jax = _use_jax(backend)
+    H = 24 * plan.sph
+    L = plan.n_lanes
+    max_slots = plan.max_slots
+    if mode == "monolithic":
+        return _execute_monolithic(plan, use_jax)
+
+    C = int(chunk_days or DEFAULT_CHUNK_DAYS) * H
+    remaining = plan.n_scen.copy()
+    rt = np.zeros(L)
+    kwh = np.zeros(L)
+    co2 = np.zeros((L, plan.E))
+    cost = np.zeros(L)
+    active = np.arange(L)
+    t0 = 0
+    while active.size:
+        C_eff = min(C, max_slots - t0)
+        inputs = _chunk_inputs(plan, active, t0, C_eff)
+        state = (remaining[active], rt[active], kwh[active], co2[active],
+                 cost[active])
+        before = remaining[active].copy()
+        out = _run_chunk(plan, active, inputs, state, use_jax)
+        remaining[active], rt[active], kwh[active], co2[active], \
+            cost[active] = out
+        unfinished = remaining[active] > 1e-6 * plan.n_scen[active]
+        if C_eff >= H:
+            made = before - remaining[active]
+            days = C_eff / H
+            stalled = (unfinished & plan.lane_periodic[active]
+                       & (made <= _STALL_FRAC_PER_DAY * days
+                          * plan.n_scen[active]))
+            if stalled.any():
+                lane = int(active[np.flatnonzero(stalled)[0]])
+                raise RuntimeError(_stall_diagnostic(
+                    plan, lane, float(remaining[lane])))
+        active = active[unfinished]
+        t0 += C_eff
+        if active.size and t0 >= max_slots:
+            worst = int(active[np.argmax(remaining[active]
+                                         / plan.n_scen[active])])
+            case = plan.cases[plan.lane_case[worst]]
+            raise RuntimeError(
+                f"case {case.name()!r} did not finish within "
+                f"max_days={plan.max_days} on the trace grid (remaining "
+                f"{remaining[worst]:.0f} of {plan.n_scen[worst]:.0f} "
+                "scenarios); its schedule may be stalled at zero intensity")
+    return _ScanState(remaining, rt, kwh, co2, cost)
+
+
+def _execute_monolithic(plan: SweepPlan, use_jax: bool) -> _ScanState:
+    """The pre-chunking behaviour: scan everything from t=0 over one
+    estimated horizon, double and re-scan on undershoot."""
+    H = 24 * plan.sph
+    L = plan.n_lanes
+    max_slots = plan.max_slots
+    all_lanes = np.arange(L)
+    T = int(math.ceil(min(plan.est_h, plan.max_days * 24.0) * plan.sph))
+    while True:
+        inputs = _chunk_inputs(plan, all_lanes, 0, T)
+        state = (plan.n_scen.copy(), np.zeros(L), np.zeros(L),
+                 np.zeros((L, plan.E)), np.zeros(L))
+        out = _run_chunk(plan, all_lanes, inputs, state, use_jax)
+        remaining = out[0]
+        if (remaining <= 1e-6 * plan.n_scen).all():
+            return _ScanState(*out)
+        if T >= H:
+            made = plan.n_scen - remaining
+            stalled = ((remaining > 1e-6 * plan.n_scen) & plan.lane_periodic
+                       & (made <= _STALL_FRAC_PER_DAY * (T / H)
+                          * plan.n_scen))
+            if stalled.any():
+                lane = int(np.flatnonzero(stalled)[0])
+                raise RuntimeError(_stall_diagnostic(
+                    plan, lane, float(remaining[lane])))
+        if T >= max_slots:
+            worst = int(np.argmax(remaining / plan.n_scen))
+            case = plan.cases[plan.lane_case[worst]]
+            raise RuntimeError(
+                f"case {case.name()!r} did not finish within "
+                f"max_days={plan.max_days} on the trace grid (remaining "
+                f"{remaining[worst]:.0f} of {plan.n_scen[worst]:.0f} "
+                "scenarios); its schedule may be stalled at zero intensity")
+        T = min(T * 2, max_slots)
+
+
+def summarize_plan(plan: SweepPlan, state: _ScanState) -> List[SimResult]:
+    """Fold the final scan state into one `SimResult` per case.
+
+    Deterministic cases report scalars; ensemble cases report ensemble
+    means in the scalar columns plus per-member `EnsembleStats` for CO2
+    (and for energy/runtime/cost too when the schedule's decisions
+    consulted the carbon signal, i.e. the dynamics themselves varied).
+    """
+    has_price = plan.price is not None
+    out: List[SimResult] = []
+    for i, case in enumerate(plan.cases):
+        lanes = np.flatnonzero(plan.lane_case == i)
+        ens = plan.case_ensemble[i]
+        if ens is None:
+            lane = int(lanes[0])
+            out.append(SimResult(
+                policy=case.name(),
+                runtime_h=float(state.runtime_s[lane]) / 3600.0,
+                energy_kwh=float(state.kwh[lane]),
+                co2_kg=float(state.co2[lane, 0]),
+                cost_usd=float(state.cost[lane]) if has_price else None))
+            continue
+        if not plan.case_expanded[i]:
+            lane = int(lanes[0])
+            co2_samples = state.co2[lane]
+            out.append(SimResult(
+                policy=case.name(),
+                runtime_h=float(state.runtime_s[lane]) / 3600.0,
+                energy_kwh=float(state.kwh[lane]),
+                co2_kg=float(co2_samples.mean()),
+                cost_usd=float(state.cost[lane]) if has_price else None,
+                co2_ensemble=ensemble_stats(co2_samples)))
+            continue
+        # carbon-dependent schedule: lane e ran member e's decisions, and
+        # only its own member's CO2 column is meaningful (the diagonal)
+        members = plan.lane_member[lanes]
+        co2_samples = state.co2[lanes, members]
+        rt_samples = state.runtime_s[lanes] / 3600.0
+        kwh_samples = state.kwh[lanes]
+        cost_samples = state.cost[lanes]
+        out.append(SimResult(
+            policy=case.name(),
+            runtime_h=float(rt_samples.mean()),
+            energy_kwh=float(kwh_samples.mean()),
+            co2_kg=float(co2_samples.mean()),
+            cost_usd=float(cost_samples.mean()) if has_price else None,
+            co2_ensemble=ensemble_stats(co2_samples),
+            energy_ensemble=ensemble_stats(kwh_samples),
+            runtime_ensemble=ensemble_stats(rt_samples)))
+    return out
 
 
 # ---------------------------------------------------------------------------
 # Differentiable objective path (the substrate of core/optimize.py).
 #
 # `trace_sweep` above is built for *evaluation*: it probes schedules with
-# Python `decide()` calls, classifies them, and retries with a doubled
-# horizon — none of which can live inside a jax trace.  `TraceObjective`
-# is the same physics specialized for *search*: everything that depends
-# on the case (signals, background, slot lengths, machine scalars) is
+# Python `decide()` calls, classifies them, and extends the horizon —
+# none of which can live inside a jax trace.  `TraceObjective` is the
+# same physics specialized for *search*: everything that depends on the
+# case (signals, background, slot lengths, machine scalars) is
 # precomputed once as static arrays, and what remains is a pure function
 #     per-slot intensities (..., n_slots)  ->  EvalMetrics
 # with no Python in the traced region, so `jax.grad` flows through the
@@ -325,7 +1121,13 @@ class EvalMetrics(NamedTuple):
     `cost_usd` is 0 when no price signal was given; `unfinished` is the
     fraction of the workload left at the end of the horizon (0 when the
     campaign completed — optimizers penalize it so solutions that stall
-    past the horizon are driven back into range).
+    past the horizon are driven back into range).  When the case's
+    carbon is a `SignalEnsemble`, `co2_kg` carries one trailing ensemble
+    axis (..., E) — one value per member — while the other fields keep
+    shape (...): the schedule family is carbon-blind, so the dynamics
+    are identical across members and only the carbonization varies.
+    `repro.core.optimize.reduce_ensemble` collapses that axis under a
+    robust objective (mean / CVaR / worst-case).
     """
     energy_kwh: Any
     co2_kg: Any
@@ -350,6 +1152,9 @@ class TraceObjective:
     `trace_sweep` would produce for the equivalent `ParametricSchedule`
     (same grid, same shared rate model); one that does not reports
     `unfinished > 0` instead of growing the grid.
+
+    A `SignalEnsemble` carbon turns `co2_kg` into a (..., E) block — the
+    substrate of `Campaign.optimize(robust=...)`.
     """
 
     def __init__(self, case, *, price: Optional[Signal] = None,
@@ -371,7 +1176,9 @@ class TraceObjective:
                          float(mach.dyn_w), float(mach.alpha),
                          float(mach.gamma), float(mach.overhead_w_frac))
 
-        carbon_sig = carbon_signal(case.carbon or GridCarbonModel())
+        carbon = case.carbon or GridCarbonModel()
+        self.ensemble_size = (len(carbon)
+                              if isinstance(carbon, SignalEnsemble) else 0)
         start = float(case.start_hour)
         g0 = math.floor(start * sph) / sph
         bg_day = _bg_table(case.bands, sph)
@@ -384,7 +1191,10 @@ class TraceObjective:
         s0 = int(round(g0 * sph)) % self.n_slots
         self.rowidx = ((s0 + slot) % self.n_slots).astype(np.int32)
         self.bg = bg_day[self.rowidx]
-        self.cf = sample_signal(carbon_sig, t_abs)
+        if self.ensemble_size:
+            self.cf = carbon.sample(t_abs)           # (E, T)
+        else:
+            self.cf = sample_signal(carbon_signal(carbon), t_abs)
         self.pr = (sample_signal(price, t_abs) if price is not None
                    else np.zeros(T))
         lens = np.full(T, 3600.0 / sph)
@@ -443,6 +1253,7 @@ class TraceObjective:
 
     def _evaluate_jax(self, u_day) -> EvalMetrics:
         n_scen = self._scalars[0]
+        E = self.ensemble_size
         u_day = jnp.asarray(u_day)
         u_t = jnp.moveaxis(u_day[..., jnp.asarray(self.rowidx)], -1, 0)
         shape = u_day.shape[:-1]
@@ -463,24 +1274,28 @@ class TraceObjective:
             dt = jnp.where(remaining > scen * ln, ln, remaining / scen)
             dt = jnp.where(remaining > 0.0, dt, 0.0)
             e = r.kwh_per_s * dt
+            co2 = (co2 + e[..., None] * cf_t) if E else (co2 + e * cf_t)
             return (remaining - r.scen_per_s * dt, rt + dt, kwh + e,
-                    co2 + e * cf_t, cost + e * pr_t), None
+                    co2, cost + e * pr_t), None
 
         zero = jnp.zeros(shape)
-        init = (jnp.full(shape, n_scen), zero, zero, zero, zero)
-        xs = (u_t, jnp.asarray(self.bg), jnp.asarray(self.cf),
+        co2_0 = jnp.zeros(shape + (E,)) if E else zero
+        init = (jnp.full(shape, n_scen), zero, zero, co2_0, zero)
+        cf_xs = jnp.asarray(self.cf.T if E else self.cf)
+        xs = (u_t, jnp.asarray(self.bg), cf_xs,
               jnp.asarray(self.pr), jnp.asarray(self.lens))
         (remaining, rt, kwh, co2, cost), _ = jax.lax.scan(step, init, xs)
         return EvalMetrics(kwh, co2, rt / 3600.0, cost, remaining / n_scen)
 
     def _evaluate_np(self, u_day: np.ndarray) -> EvalMetrics:
         n_scen = self._scalars[0]
+        E = self.ensemble_size
         u_t = u_day[..., self.rowidx]                       # (..., T)
         shape = u_day.shape[:-1]
         remaining = np.full(shape, n_scen)
         rt = np.zeros(shape)
         kwh = np.zeros(shape)
-        co2 = np.zeros(shape)
+        co2 = np.zeros(shape + (E,)) if E else np.zeros(shape)
         cost = np.zeros(shape)
         for t in range(len(self.lens)):
             if not (remaining > 0.0).any():
@@ -496,7 +1311,8 @@ class TraceObjective:
             remaining = remaining - r.scen_per_s * dt
             rt = rt + dt
             kwh = kwh + e
-            co2 = co2 + e * self.cf[t]
+            co2 = (co2 + e[..., None] * self.cf[:, t]) if E \
+                else (co2 + e * self.cf[t])
             cost = cost + e * self.pr[t]
         return EvalMetrics(kwh, co2, rt / 3600.0, cost, remaining / n_scen)
 
@@ -539,115 +1355,31 @@ def _use_jax(backend: Optional[str]) -> bool:
 
 def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
                 slots_per_hour: int = 1, progress_buckets: int = 32,
-                max_days: int = 120,
-                backend: Optional[str] = None) -> List[SimResult]:
+                max_days: int = 120, backend: Optional[str] = None,
+                chunk_days: Optional[int] = None,
+                mode: str = "chunked") -> List[SimResult]:
     """Evaluate cases on the trace grid; order is preserved.
+
+    Compile -> execute -> summarize: the case batch is lowered into a
+    `SweepPlan` (classification and tables memoized by case fingerprint),
+    scanned in fixed-shape resumable chunks (`chunk_days`, default
+    4-day chunks; finished cases are compacted out, stragglers extend
+    without re-scanning anything), and folded into `SimResult`s —
+    including per-member `EnsembleStats` for `SignalEnsemble` carbon.
 
     Use `repro.core.engine.sweep` for mixed workloads — it keeps the
     cheaper periodic path for cases that qualify and calls this for the
     rest.  `progress_buckets` sets the progress resolution of decision
     tables for progress-aware schedules (error scales ~1/buckets and is
     pinned <0.5 % vs the per-batch oracle by tests/test_trace_engine.py).
+    `mode="monolithic"` runs the pre-chunking single-scan/retry-doubling
+    executor (identical results; kept for equivalence tests and the
+    wasted-work benchmark).
     """
     if not len(cases):
         return []
-    sph = int(slots_per_hour)
-    B = int(progress_buckets)
-    S = len(cases)
-    max_hours = float(max_days) * 24.0
-
-    carbon_sigs = [carbon_signal(c.carbon or GridCarbonModel())
-                   for c in cases]
-    n_scen = np.array([float(c.workload.n_scenarios) for c in cases])
-    rate = np.array([c.workload.rate_at_full for c in cases])
-    oh = np.array([c.workload.batch_overhead_s for c in cases])
-    idle = np.array([c.machine.idle_w for c in cases])
-    dyn = np.array([c.machine.dyn_w for c in cases])
-    alpha = np.array([c.machine.alpha for c in cases])
-    gamma = np.array([c.machine.gamma for c in cases])
-    ohfrac = np.array([c.machine.overhead_w_frac for c in cases])
-    start = np.array([c.start_hour for c in cases])
-    g0 = np.floor(start * sph) / sph
-    s0 = np.round(g0 * sph).astype(int) % (24 * sph)
-
-    # classify every case exactly once: closed-form profile, or a probe of
-    # its decide() over the coarse lattice (both feed the duration
-    # estimate AND the table builder — probing is ~10^2 Python calls per
-    # case, so it must not repeat per retry)
-    from repro.core.engine import periodic_decision_profile
-    scheds = [as_schedule(c.schedule) for c in cases]
-    profs = [periodic_decision_profile(s, c.bands, sph)
-             for s, c in zip(scheds, cases)]
-    probes = [None if prof is not None else
-              _probe(scheds[i], _ctx_factory(cases[i], carbon_sigs[i],
-                                             price),
-                     float(g0[i]), max_hours)
-              for i, prof in enumerate(profs)]
-
-    est_h = max(_estimate_hours(c, prof, probe, max_hours, sph)
-                for c, prof, probe in zip(cases, profs, probes))
-    T = int(math.ceil(min(est_h, max_hours) * sph))
-
-    tabs: List[Optional[Tuple[np.ndarray, np.ndarray, bool]]] = [None] * S
-    while True:
-        H = 24 * sph
-        slot = np.arange(T)
-        t_abs = g0[:, None] + slot[None, :] / sph                   # (S, T)
-        lens = np.full((S, T), 3600.0 / sph)
-        lens[:, 0] = (g0 + 1.0 / sph - start) * 3600.0
-
-        for i, c in enumerate(cases):
-            # T-dependent tables (decide_grid / elapsed-aware) must track
-            # the grown horizon; periodic ones are reused across retries
-            if tabs[i] is None or _table_depends_on_t(scheds[i], profs[i],
-                                                      probes[i]):
-                tabs[i] = _case_tables(c, carbon_sigs[i], price, sph, T, B,
-                                       profs[i], probes[i])
-        R = max(t[0].shape[0] for t in tabs)
-        Bg = max(t[0].shape[1] for t in tabs)
-        u_tab = np.zeros((S, R, Bg))
-        b_tab = np.ones((S, R, Bg))
-        rowidx = np.empty((S, T), dtype=np.int32)
-        bg = np.empty((S, T))
-        cf = np.empty((S, T))
-        pr = np.zeros((S, T))
-        for i, (c, (u_r, b_r, periodic)) in enumerate(zip(cases, tabs)):
-            rows = u_r.shape[0]
-            u_tab[i, :rows] = np.broadcast_to(u_r, (rows, Bg)) \
-                if u_r.shape[1] == 1 else u_r
-            b_tab[i, :rows] = np.broadcast_to(b_r, (rows, Bg)) \
-                if b_r.shape[1] == 1 else b_r
-            rowidx[i] = (s0[i] + slot) % H if periodic else slot
-            bg[i] = _bg_table(c.bands, sph)[(s0[i] + slot) % H]
-            cf[i] = sample_signal(carbon_sigs[i], t_abs[i])
-            if price is not None:
-                pr[i] = sample_signal(price, t_abs[i])
-
-        args = (u_tab, b_tab, rowidx, bg, cf, pr, lens, n_scen, rate, oh,
-                idle, dyn, alpha, gamma, ohfrac)
-        if _use_jax(backend):
-            with enable_x64():
-                final = _scan_jax(*(jnp.asarray(a) for a in args), B=Bg)
-            final = tuple(np.asarray(f) for f in final)
-        else:
-            final = _scan_np(*args, B=Bg)
-        remaining, runtime_s, kwh, co2, cost = final
-
-        if (remaining <= 1e-6 * n_scen).all():
-            break
-        if T >= int(max_hours * sph):
-            worst = int(np.argmax(remaining / n_scen))
-            raise RuntimeError(
-                f"case {cases[worst].name()!r} did not finish within "
-                f"max_days={max_days} on the trace grid (remaining "
-                f"{remaining[worst]:.0f} of {n_scen[worst]:.0f} scenarios); "
-                "its schedule may be stalled at zero intensity")
-        T = min(T * 2, int(max_hours * sph))
-
-    out = []
-    for i, c in enumerate(cases):
-        out.append(SimResult(
-            policy=c.name(), runtime_h=float(runtime_s[i]) / 3600.0,
-            energy_kwh=float(kwh[i]), co2_kg=float(co2[i]),
-            cost_usd=float(cost[i]) if price is not None else None))
-    return out
+    plan = compile_plan(cases, price, slots_per_hour=slots_per_hour,
+                        progress_buckets=progress_buckets, max_days=max_days)
+    state = execute_plan(plan, backend=backend, chunk_days=chunk_days,
+                         mode=mode)
+    return summarize_plan(plan, state)

@@ -64,6 +64,49 @@ def canonical_metric(name: str) -> str:
                          f"{sorted(set(METRIC_ALIASES))}") from None
 
 
+#: Robust reductions over a carbon-trace ensemble's CO2 axis.
+ROBUST_MODES: Tuple[str, ...] = ("mean", "cvar", "worst")
+
+
+def reduce_ensemble(values, robust: str = "mean", alpha: float = 0.9,
+                    xp=np):
+    """Collapse the trailing ensemble axis of a per-member metric block.
+
+    `"mean"` is the expected value; `"worst"` the max over members;
+    `"cvar"` the Conditional Value-at-Risk at level `alpha` — the mean
+    of the worst `(1 - alpha)` fraction of members (`alpha=0.9` averages
+    the worst 10 %), the standard coherent risk measure between the two
+    extremes.  All three are differentiable on the JAX backend (sort and
+    max propagate gradients), so robust objectives flow through the same
+    grad/CEM machinery as deterministic ones.
+    """
+    if robust == "mean":
+        return values.mean(axis=-1)
+    if robust == "worst":
+        return values.max(axis=-1)
+    if robust == "cvar":
+        E = values.shape[-1]
+        k = max(1, int(math.ceil((1.0 - alpha) * E)))
+        srt = xp.sort(values, axis=-1)
+        return srt[..., E - k:].mean(axis=-1)
+    raise ValueError(f"unknown robust mode {robust!r}; choose from "
+                     f"{ROBUST_MODES}")
+
+
+def _reduce_metrics(metrics: EvalMetrics, objective: "Objective",
+                    xp=np) -> EvalMetrics:
+    """Collapse the ensemble axis of `co2_kg` (when present) under the
+    objective's robust mode.  The ensemble only carbonizes — the
+    schedule family is carbon-blind, so energy/runtime/cost carry no
+    member axis — which is why co2 is the one reduced field."""
+    co2 = metrics.co2_kg
+    if np.ndim(co2) > np.ndim(metrics.energy_kwh):
+        co2 = reduce_ensemble(co2, objective.robust, objective.cvar_alpha,
+                              xp=xp)
+        metrics = metrics._replace(co2_kg=co2)
+    return metrics
+
+
 @dataclasses.dataclass(frozen=True)
 class Objective:
     """What "best schedule" means: weighted metrics + ε-constraints.
@@ -75,11 +118,20 @@ class Objective:
     feasible optima sit within a fraction of a percent of active caps.
     Unfinished campaigns (workload left past the evaluation horizon) are
     penalized separately and much harder: they are not schedules at all.
+
+    When the case's carbon is a `SignalEnsemble`, `robust` picks how the
+    per-member CO2 axis collapses before weighting and constraining:
+    `"mean"` (expected CO2), `"cvar"` (mean of the worst `1 - cvar_alpha`
+    fraction of members), or `"worst"` (max over members).  A CO2 cap
+    under `robust="cvar"` therefore reads "the CVaR of CO2 must stay
+    under the cap".
     """
     weights: Mapping[str, float]
     constraints: Mapping[str, float] = dataclasses.field(default_factory=dict)
     penalty: float = 200.0
     unfinished_penalty: float = 1e4
+    robust: str = "mean"
+    cvar_alpha: float = 0.9
 
     def __post_init__(self):
         object.__setattr__(self, "weights", {
@@ -93,6 +145,12 @@ class Objective:
             if cap <= 0.0:
                 raise ValueError(f"constraint cap for {k} must be positive, "
                                  f"got {cap}")
+        if self.robust not in ROBUST_MODES:
+            raise ValueError(f"unknown robust mode {self.robust!r}; choose "
+                             f"from {ROBUST_MODES}")
+        if not (0.0 < self.cvar_alpha < 1.0):
+            raise ValueError(f"cvar_alpha must be in (0, 1), got "
+                             f"{self.cvar_alpha}")
 
     @classmethod
     def coerce(cls, objective, constraints=None) -> "Objective":
@@ -115,13 +173,23 @@ class Objective:
         parts = [k.split("_")[0] for k, w in self.weights.items() if w]
         for k in self.constraints:
             parts.append(f"{k.split('_')[0]}<={self.constraints[k]:g}")
+        if self.robust != "mean":
+            tag = (f"cvar{self.cvar_alpha:g}" if self.robust == "cvar"
+                   else self.robust)
+            parts.append(tag)
         return ",".join(parts)
 
 
 def scalarize(metrics: EvalMetrics, objective: Objective,
               scales: Mapping[str, float], xp=np):
     """The scalar loss both search modes minimize (float or array in,
-    same shape out; polymorphic over NumPy/jnp like the rate model)."""
+    same shape out; polymorphic over NumPy/jnp like the rate model).
+
+    An ensemble CO2 axis (co2_kg one dim wider than the other metrics)
+    is collapsed first under the objective's robust mode, so weights and
+    caps always act on one scalar CO2 per candidate.
+    """
+    metrics = _reduce_metrics(metrics, objective, xp=xp)
     val = 0.0
     for k, w in objective.weights.items():
         val = val + w * getattr(metrics, k) / scales[k]
@@ -155,6 +223,7 @@ class OptimizeResult:
     history: List[float]              # best objective value per iteration
     evaluations: int                  # total candidate evaluations
     frontier: List[SimResult] = dataclasses.field(default_factory=list)
+    co2_ensemble: Optional[np.ndarray] = None   # per-member CO2 at optimum
 
 
 def pareto_front(points: np.ndarray) -> np.ndarray:
@@ -301,7 +370,9 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
                       init: Union[float, Sequence[float]] = 0.6,
                       levels: Optional[Sequence[float]] = None,
                       seed: int = 0, backend: Optional[str] = None,
-                      pareto: bool = False) -> OptimizeResult:
+                      pareto: bool = False,
+                      robust: Optional[str] = None,
+                      cvar_alpha: Optional[float] = None) -> OptimizeResult:
     """Search the `ParametricSchedule` space for the case's best schedule.
 
     `objective` is a metric name, a weights mapping, or an `Objective`;
@@ -323,10 +394,21 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
     (cem only) attaches the non-dominated runtime-vs-primary-metric set
     of every candidate evaluated.
 
+    `robust` / `cvar_alpha` override the objective's ensemble reduction
+    when the case's carbon is a `SignalEnsemble` — "mean" optimizes
+    expected CO2 across the members, "cvar" the mean of the worst
+    `1 - cvar_alpha` tail, "worst" the maximum (see `reduce_ensemble`);
+    all three run under both the jitted and the NumPy backends.
+
     See docs/OPTIMIZER.md for objective/constraint semantics and for
     when grad beats population search.
     """
     obj = Objective.coerce(objective, constraints)
+    if robust is not None or cvar_alpha is not None:
+        obj = dataclasses.replace(
+            obj, robust=robust if robust is not None else obj.robust,
+            cvar_alpha=(cvar_alpha if cvar_alpha is not None
+                        else obj.cvar_alpha))
     if candidates < 2:
         raise ValueError(f"candidates must be >= 2, got {candidates} "
                          "(the population keeps the incumbent mean and "
@@ -364,8 +446,10 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
     p0 = np.asarray(seed_sched.logits, dtype=float)
 
     # normalization: one reference evaluation makes weights/penalties
-    # workload-independent ("1 unit" = the seed schedule's metric)
-    ref = to.evaluate_batch(init_u[None, :])
+    # workload-independent ("1 unit" = the seed schedule's metric);
+    # ensemble CO2 is reduced first so the scale matches the reduced
+    # quantity the loss actually weights
+    ref = _reduce_metrics(to.evaluate_batch(init_u[None, :]), obj, xp=np)
     scales = {k: max(abs(float(np.asarray(getattr(ref, k))[0])), 1e-9)
               for k in METRIC_KEYS}
 
@@ -416,8 +500,10 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
     final_case = dataclasses.replace(case, schedule=sched, label=sched.name)
     result = trace_sweep([final_case], price=price, slots_per_hour=sph,
                          backend=backend)[0]
-    best_metrics = _metrics_at(
-        to.evaluate_batch(sched.intensity_table()[None, :]), 0)
+    raw_best = to.evaluate_batch(sched.intensity_table()[None, :])
+    co2_members = (np.asarray(raw_best.co2_kg)[0].copy()
+                   if to.ensemble_size else None)
+    best_metrics = _metrics_at(_reduce_metrics(raw_best, obj, xp=np), 0)
     value = float(scalarize(best_metrics, obj, scales, xp=np))
 
     frontier: List[SimResult] = []
@@ -425,6 +511,7 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
         all_mets = EvalMetrics(*(np.concatenate(
             [np.asarray(getattr(m, k)) for _, m in collect])
             for k in EvalMetrics._fields))
+        all_mets = _reduce_metrics(all_mets, obj, xp=np)
         # frontier axes: runtime vs the heaviest non-runtime weighted
         # metric (runtime is always the frontier's x-axis)
         others = [k for k in obj.weights
@@ -449,8 +536,9 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
     return OptimizeResult(schedule=sched, result=result, value=value,
                           metrics=best_metrics, objective=obj, method=method,
                           history=history, evaluations=n_evals,
-                          frontier=frontier)
+                          frontier=frontier, co2_ensemble=co2_members)
 
 
-__all__ = ["METRIC_KEYS", "Objective", "OptimizeResult", "canonical_metric",
-           "optimize_schedule", "pareto_front", "scalarize"]
+__all__ = ["METRIC_KEYS", "ROBUST_MODES", "Objective", "OptimizeResult",
+           "canonical_metric", "optimize_schedule", "pareto_front",
+           "reduce_ensemble", "scalarize"]

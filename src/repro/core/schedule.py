@@ -222,6 +222,14 @@ class ParametricSchedule:
     name: str = "parametric"
     levels: Optional[Tuple[float, ...]] = None
 
+    #: Contract flag for the trace engine's compiler: decisions depend on
+    #: hour-of-day only (never elapsed/progress/carbon), so the decide_grid
+    #: table may be lowered to one day-periodic block instead of being
+    #: rebuilt per horizon chunk.  Custom decide_grid schedules may opt in
+    #: by declaring the same attribute; without it they keep exact
+    #: per-slot tables.
+    periodic_decisions = True
+
     def __post_init__(self):
         n = len(self.logits)
         if n < 1:

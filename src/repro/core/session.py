@@ -33,7 +33,8 @@ from repro.core.energy import ChipProfile, MachineProfile, StepCost
 from repro.core.engine import SweepCase, frontier_from_sweep, sweep
 from repro.core.policy import BASELINE, POLICIES, TimeBands
 from repro.core.schedule import Schedule, as_schedule
-from repro.core.signal import Signal, SignalSet, as_trace, default_signals
+from repro.core.signal import (Signal, SignalSet, as_ensemble, as_trace,
+                               default_signals)
 from repro.core.simulator import (SimResult, calibrate_workload, fill_deltas,
                                   simulate_campaign, simulate_campaign_exact)
 from repro.core.tracker import RunSummary, RunTracker
@@ -178,6 +179,7 @@ class Campaign:
               workloads: Optional[Sequence[OEMWorkload]] = None,
               deltas: bool = False,
               carbon_trace=None,
+              carbon_ensemble=None,
               deadline_h: float = 0.0) -> List[SimResult]:
         """Vectorized (schedule x workload x grid-curve) sweep.
 
@@ -191,15 +193,26 @@ class Campaign:
 
         `carbon_trace` accepts an hourly kg-CO2e/kWh sequence of any
         length (e.g. a week-long forecast; hour 0 = midnight of day 0) or
-        a ready Signal, and replaces `carbons`.  A non-zero `deadline_h`
+        a ready Signal, and replaces `carbons`.  `carbon_ensemble`
+        accepts a `SignalEnsemble` (or an (E, T) array / list of traces;
+        see `repro.core.signal.as_ensemble` and `trace_windows`) and
+        evaluates every schedule against all E carbon scenarios in one
+        scan: results carry the ensemble-mean `co2_kg` plus per-member
+        `EnsembleStats` in `co2_ensemble`.  A non-zero `deadline_h`
         is surfaced to every schedule via `ctx.deadline_h`, so one
         deadline-aware schedule can be swept against many deadlines.
         """
+        exclusive = [n for n, v in (("carbons", carbons),
+                                    ("carbon_trace", carbon_trace),
+                                    ("carbon_ensemble", carbon_ensemble))
+                     if v is not None]
+        if len(exclusive) > 1:
+            raise ValueError(f"pass only one of carbons=, carbon_trace=, "
+                             f"carbon_ensemble=; got {exclusive}")
         if carbon_trace is not None:
-            if carbons is not None:
-                raise ValueError("pass either carbons= or carbon_trace=, "
-                                 "not both")
             carbons = [as_trace(carbon_trace, name="carbon-trace")]
+        elif carbon_ensemble is not None:
+            carbons = [as_ensemble(carbon_ensemble, name="carbon-ensemble")]
         wl0, m = self.calibrated()
         cases = []
         for wl in (workloads if workloads is not None else [wl0]):
@@ -216,6 +229,7 @@ class Campaign:
 
     def optimize(self, objective="co2", *, constraints=None,
                  deadline_h: float = 0.0, carbon_trace=None,
+                 carbon_ensemble=None, robust: Optional[str] = None,
                  deltas: bool = False, **kwargs):
         """Synthesize a near-optimal schedule for this campaign.
 
@@ -231,10 +245,17 @@ class Campaign:
         (ε-constraints).  `deadline_h` is shorthand for a runtime cap —
         ``optimize("co2", deadline_h=200.0)`` reads *min CO2 subject to
         finishing in 200 h*.  `carbon_trace` swaps in a non-periodic
-        hourly forecast exactly like `Campaign.sweep`.  Remaining
+        hourly forecast exactly like `Campaign.sweep`; `carbon_ensemble`
+        swaps in a whole scenario ensemble (`SignalEnsemble`, (E, T)
+        array, or list of traces), and `robust` picks how the
+        per-member CO2 collapses into the loss — ``"mean"`` (expected),
+        ``"cvar"`` (tail mean at `cvar_alpha`, pass via kwargs), or
+        ``"worst"`` — so ``optimize("co2", robust="cvar",
+        carbon_ensemble=windows)`` synthesizes a schedule whose *bad
+        carbon weeks* are cheap, not just its average one.  Remaining
         keyword arguments go to `optimize_schedule` (method, candidates,
         iterations, steps, lr, n_slots, u_min/u_max, levels, pareto,
-        seed, ...).
+        seed, cvar_alpha, ...).
 
         Returns an `OptimizeResult`: `.schedule` (a drop-in Schedule),
         `.result` (a SimResult comparable to sweep/frontier rows —
@@ -244,8 +265,17 @@ class Campaign:
         """
         from repro.core.optimize import canonical_metric, optimize_schedule
         wl, m = self.calibrated()
-        carbon = (as_trace(carbon_trace, name="carbon-trace")
-                  if carbon_trace is not None else self.carbon)
+        if carbon_trace is not None and carbon_ensemble is not None:
+            raise ValueError("pass either carbon_trace= or "
+                             "carbon_ensemble=, not both")
+        if carbon_ensemble is not None:
+            carbon = as_ensemble(carbon_ensemble, name="carbon-ensemble")
+        elif carbon_trace is not None:
+            carbon = as_trace(carbon_trace, name="carbon-trace")
+        else:
+            carbon = self.carbon
+        if robust is not None:
+            kwargs["robust"] = robust
         # canonicalize aliases ("runtime", "deadline") BEFORE merging the
         # deadline_h shorthand, so an explicit user cap always wins and
         # the runtime cap is found for case.deadline_h below

@@ -149,6 +149,122 @@ class TraceSignal:
         return self._arr[idx]
 
 
+@dataclasses.dataclass(frozen=True)
+class SignalEnsemble:
+    """A stack of carbon (or price) traces treated as one uncertain signal.
+
+    The carbon-aware workflow literature evaluates savings across *many*
+    trace windows, not one deterministic forecast; a `SignalEnsemble`
+    carries those E scenario members side by side.  Members are usually
+    `TraceSignal`s (historical windows, forecast samples) but any Signal
+    works.  `sample(hours)` returns the whole `(E, *hours.shape)` block in
+    one vectorized call — the shape the trace-grid scan vmaps its CO2
+    accumulators over to produce per-member metrics.
+
+    `period_h` is None, so a sweep case whose carbon is an ensemble always
+    routes to the trace-grid engine.  `at(hour)` returns the member mean
+    (the sequential simulators see the ensemble's central scenario; use
+    `member(e)` to simulate one realization).
+    """
+    members: Tuple[Signal, ...]
+    name: str = "ensemble"
+
+    def __post_init__(self):
+        if len(self.members) < 1:
+            raise ValueError("SignalEnsemble needs at least one member")
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    @property
+    def n_members(self) -> int:
+        return len(self.members)
+
+    @property
+    def period_h(self) -> Optional[float]:
+        return None
+
+    def member(self, e: int) -> Signal:
+        return self.members[e]
+
+    def at(self, hour: float) -> float:
+        at = 0.0
+        for m in self.members:
+            at += float(m.at(hour))
+        return at / len(self.members)
+
+    def sample(self, hours) -> np.ndarray:
+        """Vectorized sampling of every member: (E, *hours.shape)."""
+        hours = np.asarray(hours, dtype=float)
+        return np.stack([sample_signal(m, hours) for m in self.members])
+
+
+def as_ensemble(value, name: str = "ensemble") -> SignalEnsemble:
+    """Coerce to a `SignalEnsemble`.
+
+    Accepts an ensemble (passed through), a 2-D array of shape (E, T)
+    (each row becomes an hourly `TraceSignal`), or an iterable of members
+    where each member is a Signal or an hourly sequence (`as_trace`
+    coercion per member).
+    """
+    if isinstance(value, SignalEnsemble):
+        return value
+    arr = None
+    if not callable(getattr(value, "at", None)):
+        try:
+            arr = np.asarray(value, dtype=float)
+        except (TypeError, ValueError):
+            arr = None
+    if arr is not None and arr.ndim == 2:
+        return SignalEnsemble(tuple(
+            TraceSignal(tuple(float(v) for v in row), name=f"{name}[{e}]")
+            for e, row in enumerate(arr)), name=name)
+    if arr is not None and arr.ndim == 1 and arr.dtype != object:
+        raise TypeError(
+            "a flat hourly series is one trace, not an ensemble — pass it "
+            "as carbon_trace= (or wrap it: as_ensemble([series]), or give "
+            "an (E, T) array / list of traces)")
+    try:
+        members = list(value)
+    except TypeError:
+        raise TypeError(
+            f"cannot interpret {type(value).__name__} as a SignalEnsemble; "
+            "pass an ensemble, an (E, T) array, or a list of traces/Signals"
+        ) from None
+    if not members:
+        raise ValueError("SignalEnsemble needs at least one member")
+    return SignalEnsemble(tuple(as_trace(m, name=f"{name}[{e}]")
+                                for e, m in enumerate(members)), name=name)
+
+
+def trace_windows(values, window_h: int, stride_h: Optional[int] = None,
+                  start_hour: float = 0.0,
+                  name: str = "windows") -> SignalEnsemble:
+    """Slice one long hourly series into an ensemble of sliding windows.
+
+    The standard way to build a scenario ensemble from a historical
+    grid-carbon archive: every `stride_h` (default `window_h`, i.e.
+    non-overlapping) a `window_h`-hour window becomes one member, each
+    re-anchored to `start_hour` so all members cover the same campaign
+    hours.  Raises if the series is shorter than one window.
+    """
+    arr = np.asarray(list(values), dtype=float).ravel()
+    window_h = int(window_h)
+    stride = int(stride_h) if stride_h is not None else window_h
+    if window_h < 1 or stride < 1:
+        raise ValueError("window_h and stride_h must be positive")
+    if len(arr) < window_h:
+        raise ValueError(f"series of {len(arr)} hours is shorter than one "
+                         f"{window_h}-hour window")
+    members = []
+    for e, o in enumerate(range(0, len(arr) - window_h + 1, stride)):
+        members.append(TraceSignal(tuple(float(v)
+                                         for v in arr[o:o + window_h]),
+                                   start_hour=start_hour,
+                                   name=f"{name}[{e}]"))
+    return SignalEnsemble(tuple(members), name=name)
+
+
 def as_trace(values, start_hour: float = 0.0,
              name: str = "trace") -> TraceSignal:
     """Coerce an hourly sequence (or pass through a Signal) to a trace.
@@ -177,6 +293,8 @@ def sample_signal(signal, hours) -> np.ndarray:
         return np.asarray(signal.values, dtype=float)[idx]
     if isinstance(signal, TraceSignal):
         return signal.sample(hours)
+    if isinstance(signal, SignalEnsemble):   # scalar view: the member mean
+        return signal.sample(hours).mean(axis=0)
     if hasattr(signal, "factor_at"):    # GridCarbonModel duck type
         return sample_signal(carbon_signal(signal), hours)
     return np.array([float(signal.at(float(h))) for h in hours.ravel()]

@@ -38,6 +38,44 @@ from repro.core.tracker import RunSummary, RunTracker
 from repro.core.workload import OEMWorkload
 
 
+@dataclasses.dataclass(frozen=True)
+class EnsembleStats:
+    """Distribution of one metric over a carbon-trace ensemble.
+
+    Built by `ensemble_stats` from the per-member samples the trace-grid
+    scan produces; `mean`/`std`/`min`/`max` plus the 5/50/95 % quantiles
+    summarize it, and `samples` keeps the raw per-member values (order =
+    ensemble member order) for custom risk measures.
+    """
+    mean: float
+    std: float
+    lo: float                         # min over members
+    hi: float                         # max over members
+    q05: float
+    q50: float
+    q95: float
+    samples: Tuple[float, ...]
+
+    @property
+    def n_members(self) -> int:
+        return len(self.samples)
+
+    def quantile(self, q: float) -> float:
+        import numpy as _np
+        return float(_np.quantile(_np.asarray(self.samples), q))
+
+
+def ensemble_stats(samples) -> EnsembleStats:
+    """`EnsembleStats` from an array of per-member metric values."""
+    import numpy as _np
+    arr = _np.asarray(samples, dtype=float).ravel()
+    q05, q50, q95 = (float(q) for q in _np.quantile(arr, (0.05, 0.5, 0.95)))
+    return EnsembleStats(mean=float(arr.mean()), std=float(arr.std()),
+                         lo=float(arr.min()), hi=float(arr.max()),
+                         q05=q05, q50=q50, q95=q95,
+                         samples=tuple(float(v) for v in arr))
+
+
 @dataclasses.dataclass
 class SimResult:
     policy: str
@@ -48,6 +86,13 @@ class SimResult:
     energy_delta_pct: float = 0.0    # vs baseline (- = saves)
     cost_usd: Optional[float] = None  # set when a price Signal is supplied
     summary: Optional[RunSummary] = None
+    # Filled by ensemble sweeps (carbon = SignalEnsemble): the scalar
+    # columns above then hold ensemble means, and these carry the spread.
+    # energy/runtime stats appear only when the schedule consults the
+    # carbon signal (then the dynamics themselves vary per member).
+    co2_ensemble: Optional[EnsembleStats] = None
+    energy_ensemble: Optional[EnsembleStats] = None
+    runtime_ensemble: Optional[EnsembleStats] = None
 
 
 def _segment_grid(schedule: Schedule, bands: TimeBands,

@@ -176,6 +176,45 @@ def test_heterogeneous_start_hours_and_machines(calibrated):
 
 
 # ---------------------------------------------------------------------------
+# Chunked resumable executor (PR-4): the default engine path scans in
+# fixed-shape chunks with state carried across them — it must reproduce
+# the monolithic single-scan numbers on this file's own case families.
+# Deeper chunking/ensemble coverage lives in tests/test_ensemble.py.
+# ---------------------------------------------------------------------------
+def test_chunked_executor_matches_monolithic_on_this_files_cases(calibrated):
+    wl, m = calibrated
+    trace = _week_trace()
+    cases = ([SweepCase(p, wl, m) for p in POLICIES.values()]
+             + [SweepCase(deadline_schedule(200.0), wl, m, carbon=trace),
+                SweepCase(progress_ramp_schedule(0.4, 0.9), wl, m,
+                          carbon=trace, start_hour=3.0)])
+    for chunk_days in (2, 4):
+        chunked = trace_sweep(cases, chunk_days=chunk_days)
+        mono = trace_sweep(cases, mode="monolithic")
+        for a, b in zip(mono, chunked):
+            assert abs(b.runtime_h / a.runtime_h - 1) < 1e-9, a.policy
+            assert abs(b.energy_kwh / a.energy_kwh - 1) < 1e-9, a.policy
+            assert abs(b.co2_kg / a.co2_kg - 1) < 1e-9, a.policy
+
+
+def test_sweep_dispatches_ensemble_to_trace_path(calibrated):
+    """A SignalEnsemble carbon is never representable on the periodic
+    grid: sweep() must route it to the trace engine and attach per-member
+    stats, order preserved in a mixed batch."""
+    from repro.core import SignalEnsemble
+    wl, m = calibrated
+    ens = SignalEnsemble((_week_trace(), _week_trace(0.5)))
+    mixed = [SweepCase(BASELINE, wl, m),
+             SweepCase(BASELINE, wl, m, carbon=ens)]
+    res = sweep(mixed)
+    assert res[0].co2_ensemble is None
+    assert res[1].co2_ensemble is not None
+    assert res[1].co2_ensemble.n_members == 2
+    assert res[1].co2_kg == pytest.approx(
+        np.mean(res[1].co2_ensemble.samples))
+
+
+# ---------------------------------------------------------------------------
 # TraceSignal semantics
 # ---------------------------------------------------------------------------
 def test_trace_signal_clamps_and_samples():
