@@ -14,12 +14,16 @@ migration table from the old free functions.
 from repro.core import (  # noqa: F401
     # session API
     Campaign, CampaignReport,
+    # fleet (site-level) session API
+    Fleet, FleetResult, Site, SiteRollup, fleet_sweep, simulate_fleet,
     # scheduling surface
-    DeadlineSchedule, Decision, FunctionSchedule, HourlyPolicy,
+    AllocationSchedule, CarbonGateSchedule, DeadlineSchedule, Decision,
+    FunctionSchedule, HourlyPolicy,
     ParametricSchedule, Policy, Schedule, SchedulingContext, as_schedule,
-    constant_schedule, deadline_schedule, hourly_schedule,
+    carbon_gated_cap, constant_schedule, deadline_schedule,
+    deadline_weighted_split, dedupe_names, hourly_schedule,
     make_carbon_aware_policy, make_carbon_weighted_boosted,
-    parametric_schedule, progress_ramp_schedule,
+    parametric_schedule, progress_ramp_schedule, proportional_split,
     # the six Figure-1 policies
     BASELINE, PEAK_AWARE_BOOSTED, PEAK_AWARE_AGGRESSIVE, LOW_PRIORITY_ONLY,
     SMALL_BATCHES, LARGE_BATCHES, POLICIES,
@@ -32,7 +36,7 @@ from repro.core import (  # noqa: F401
     EnsembleStats, ensemble_stats,
     # time structure + models
     BANDS, TimeBands, GridCarbonModel, MIDWEST_HOURLY, DTE_FACTOR,
-    ChipProfile, EnergyModel, MachineProfile, StepCost,
+    ChipProfile, EnergyModel, MachineProfile, StepCost, site_throttle,
     # sweep engines (periodic 24-slot; the trace-grid scan's trace_sweep
     # is re-exported lazily below so importing carina stays jax-free)
     SweepCase, frontier_from_sweep, hourly_profile, sweep,
@@ -49,10 +53,12 @@ from repro.core import (  # noqa: F401
 
 
 _LAZY = ("trace_sweep", "TraceObjective", "EvalMetrics", "evaluate_params",
+         "FleetTraceObjective", "FleetEvalMetrics",
          "SweepPlan", "compile_plan", "execute_plan", "summarize_plan",
          "ScanStats", "scan_stats", "reset_scan_stats",
-         "Objective", "OptimizeResult", "optimize_schedule", "pareto_front",
-         "reduce_ensemble", "ROBUST_MODES")
+         "Objective", "OptimizeResult", "FleetOptimizeResult",
+         "optimize_schedule", "optimize_fleet", "pareto_front",
+         "reduce_ensemble", "ROBUST_MODES", "scalarize_fleet")
 
 
 def __getattr__(name):

@@ -11,7 +11,10 @@ from repro.core.dashboard import render_frontier_dashboard, render_run_dashboard
 from repro.core.energy import (ChipProfile, EnergyModel, MachineProfile,  # noqa: F401
                                StepCost)
 from repro.core.engine import SweepCase, frontier_from_sweep, hourly_profile, sweep  # noqa: F401
-from repro.core.model import Rates, campaign_rates, power_w, rates  # noqa: F401
+from repro.core.fleet import (Fleet, FleetResult, Site, SiteRollup,  # noqa: F401
+                              fleet_sweep, simulate_fleet)
+from repro.core.model import (Rates, campaign_rates, power_w, rates,  # noqa: F401
+                              site_throttle)
 from repro.core.policy import (BANDS, BASELINE, LARGE_BATCHES,  # noqa: F401
                                LOW_PRIORITY_ONLY, PEAK_AWARE_AGGRESSIVE,
                                PEAK_AWARE_BOOSTED, POLICIES, SMALL_BATCHES,
@@ -19,11 +22,14 @@ from repro.core.policy import (BANDS, BASELINE, LARGE_BATCHES,  # noqa: F401
                                constant_schedule, hourly_schedule,
                                make_carbon_aware_policy,
                                make_carbon_weighted_boosted)
-from repro.core.schedule import (DeadlineSchedule, Decision,  # noqa: F401
+from repro.core.schedule import (AllocationSchedule, CarbonGateSchedule,  # noqa: F401
+                                 DeadlineSchedule, Decision,
                                  FunctionSchedule, ParametricSchedule,
                                  Schedule, SchedulingContext, as_schedule,
-                                 deadline_schedule, parametric_schedule,
-                                 progress_ramp_schedule)
+                                 carbon_gated_cap, deadline_schedule,
+                                 deadline_weighted_split, dedupe_names,
+                                 parametric_schedule,
+                                 progress_ramp_schedule, proportional_split)
 from repro.core.session import Campaign, CampaignReport  # noqa: F401
 from repro.core.signal import (TOU_PRICE, BandSignal, ConstantSignal,  # noqa: F401
                                HourlySignal, Signal, SignalEnsemble,
@@ -58,12 +64,17 @@ _LAZY = {
     "ScanStats": "repro.core.engine_jax",
     "scan_stats": "repro.core.engine_jax",
     "reset_scan_stats": "repro.core.engine_jax",
+    "FleetTraceObjective": "repro.core.engine_jax",
+    "FleetEvalMetrics": "repro.core.engine_jax",
     "Objective": "repro.core.optimize",
     "OptimizeResult": "repro.core.optimize",
+    "FleetOptimizeResult": "repro.core.optimize",
     "optimize_schedule": "repro.core.optimize",
+    "optimize_fleet": "repro.core.optimize",
     "pareto_front": "repro.core.optimize",
     "reduce_ensemble": "repro.core.optimize",
     "ROBUST_MODES": "repro.core.optimize",
+    "scalarize_fleet": "repro.core.optimize",
 }
 
 

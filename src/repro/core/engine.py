@@ -248,7 +248,8 @@ def _case_is_periodic(case: SweepCase, price: Optional[Signal]) -> bool:
 def sweep(cases: Sequence[SweepCase],
           price: Optional[Signal] = None,
           progress_buckets: int = 32,
-          backend: Optional[str] = None) -> List[SimResult]:
+          backend: Optional[str] = None,
+          max_days: int = 120) -> List[SimResult]:
     """Evaluate all cases in vectorized passes; order is preserved.
 
     Each case is dispatched to the periodic 24-slot path when its
@@ -259,7 +260,8 @@ def sweep(cases: Sequence[SweepCase],
     mean + `EnsembleStats`), and sub-hour band edges all take the trace
     path instead of raising.
 
-    `progress_buckets` and `backend` ("jax"/"numpy") tune the trace path.
+    `progress_buckets`, `backend` ("jax"/"numpy") and `max_days` (the
+    trace grid's horizon cap) tune the trace path.
     """
     if not len(cases):
         return []
@@ -291,7 +293,8 @@ def sweep(cases: Sequence[SweepCase],
         sph = functools.reduce(math.lcm,
                                (case_slots_per_hour(c) for c in sub))
         res = trace_sweep(sub, price=price, slots_per_hour=sph,
-                          progress_buckets=progress_buckets, backend=backend)
+                          progress_buckets=progress_buckets, backend=backend,
+                          max_days=max_days)
         for i, r in zip(trace_idx, res):
             out[i] = r
     return out  # type: ignore[return-value]

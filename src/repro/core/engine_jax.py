@@ -91,6 +91,14 @@ DEFAULT_CHUNK_DAYS = 4
 #: complete orders of magnitude more).
 _STALL_FRAC_PER_DAY = 1e-9
 
+#: Remaining-work fraction below which a lane counts as finished — the
+#: executor's compaction threshold, and the site-coupled kernels' power
+#: mask: a lane whose fp residue is epsilon-positive must not demand a
+#: full slot of site power (backends round the final subtraction
+#: differently, and one phantom throttled slot costs the rest of the
+#: group real throughput).
+_FINISH_FRAC = 1e-6
+
 
 # ---------------------------------------------------------------------------
 # Scan statistics: benchmarks (and curious users) read these to see how
@@ -99,9 +107,22 @@ _STALL_FRAC_PER_DAY = 1e-9
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class ScanStats:
-    """Counters over every scan executed since the last reset."""
+    """Counters over every scan executed since the last reset.
+
+    `slot_work` counts scan-lane x slot units actually executed (the
+    wasted-work metric the chunked executor minimizes); `chunks` counts
+    kernel launches; `grouped_lanes` counts lane x chunk units that ran
+    through the site-coupled (grouped-lane) kernel — 0 for plain sweeps;
+    `plan_hits`/`plan_misses` count the per-case compile cache;
+    `jit_shapes` holds the distinct shape signatures handed to the
+    jitted kernels (each costs one XLA compile, summarized by
+    `jit_compiles`).  Counters accumulate per process — pass
+    `scan_stats(reset=True)` (or call `reset_scan_stats()`) to zero
+    them between measurements.
+    """
     slot_work: int = 0            # scan-lane x slot units executed
     chunks: int = 0               # kernel launches
+    grouped_lanes: int = 0        # lane x chunk units in coupled groups
     plan_hits: int = 0            # per-case compile cache hits
     plan_misses: int = 0
     jit_shapes: Set[tuple] = dataclasses.field(default_factory=set)
@@ -116,15 +137,27 @@ class ScanStats:
 _STATS = ScanStats()
 
 
-def scan_stats() -> ScanStats:
-    """A snapshot copy of the engine's scan counters."""
-    return dataclasses.replace(_STATS, jit_shapes=set(_STATS.jit_shapes))
+def scan_stats(reset: bool = False) -> ScanStats:
+    """A snapshot copy of the engine's scan counters.
+
+    `reset=True` zeroes the live counters *after* taking the snapshot —
+    the idiom for before/after measurements in one process:
+
+        scan_stats(reset=True)        # drop whatever accumulated
+        run_sweep()
+        work = scan_stats().slot_work
+    """
+    snap = dataclasses.replace(_STATS, jit_shapes=set(_STATS.jit_shapes))
+    if reset:
+        reset_scan_stats()
+    return snap
 
 
 def reset_scan_stats() -> None:
     """Zero the counters (including the jit-shape signature set)."""
     _STATS.slot_work = 0
     _STATS.chunks = 0
+    _STATS.grouped_lanes = 0
     _STATS.plan_hits = 0
     _STATS.plan_misses = 0
     _STATS.jit_shapes = set()
@@ -532,6 +565,17 @@ class SweepPlan:
     s0: np.ndarray
     bg_day: np.ndarray                       # (L, 24*sph)
     est_h: float                             # max over cases
+    # fleet (lane-group) layout: adjacent cases of one fleet share a
+    # group; a finite per-group cap turns on the site-coupled kernel
+    group_sizes: Tuple[int, ...] = ()        # cases per group (sum = n cases)
+    case_group: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=int))   # (n cases,)
+    lane_group: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=int))   # (L,)
+    group_cap_kw: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))  # (G,), inf = uncoupled
+    group_office_kw: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))  # (G,) peak office draw
     grids: Dict[tuple, np.ndarray] = dataclasses.field(default_factory=dict)
 
     @property
@@ -542,6 +586,12 @@ class SweepPlan:
     def max_slots(self) -> int:
         return int(self.max_days * 24 * self.sph)
 
+    @property
+    def coupled(self) -> bool:
+        """True when any group has a finite site cap (the scan must run
+        the grouped site-coupled kernel)."""
+        return bool(np.isfinite(self.group_cap_kw).any())
+
 
 class _ScanState(NamedTuple):
     """Scan accumulators, carried across chunks."""
@@ -550,22 +600,82 @@ class _ScanState(NamedTuple):
     kwh: np.ndarray           # (L,)
     co2: np.ndarray           # (L, E)
     cost: np.ndarray          # (L,)
+    # site draw peak (kW, office + fleet) seen by each lane's group while
+    # the lane was active; None on uncoupled plans (the plain kernels do
+    # not track it).  Group peak = max over the group's lanes.
+    site_kw_peak: Optional[np.ndarray] = None
 
 
 def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
                  slots_per_hour: int = 1, progress_buckets: int = 32,
-                 max_days: int = 120) -> SweepPlan:
+                 max_days: int = 120,
+                 group_sizes: Optional[Sequence[int]] = None,
+                 group_caps_kw: Optional[Sequence[Optional[float]]] = None,
+                 group_office_kw: Optional[Sequence[float]] = None
+                 ) -> SweepPlan:
     """Lower a case batch into a `SweepPlan` (the scan's input form).
 
     Per-case classification (closed-form profile / probe / decide_grid)
     is memoized by case fingerprint across calls, so re-sweeping the
     same cases — or re-evaluating an optimizer's warm-start loop — skips
     the Python probing entirely.
+
+    `group_sizes` partitions the case sequence into fleet *groups* of
+    adjacent cases (the M campaigns of one fleet case); `group_caps_kw`
+    gives each group's site power cap in kW (None/inf = uncoupled) and
+    `group_office_kw` its peak office/background draw (scaled by the
+    band background over the day).  Groups with a finite cap run the
+    site-coupled kernel: per slot, the summed active draw of the group
+    is compared to the headroom and every member's intensity is
+    curtailed by the shared `model.site_throttle` factor.  With the
+    defaults every case is its own uncoupled group and the scan is
+    byte-identical to the ungrouped engine.
     """
     sph = int(slots_per_hour)
     B = int(progress_buckets)
     max_hours = float(max_days) * 24.0
     H = 24 * sph
+
+    # ---- group layout ----------------------------------------------------
+    if group_sizes is None:
+        group_sizes = (1,) * len(cases)
+    group_sizes = tuple(int(g) for g in group_sizes)
+    if sum(group_sizes) != len(cases) or any(g < 1 for g in group_sizes):
+        raise ValueError(
+            f"group_sizes {group_sizes} must be positive and sum to the "
+            f"case count ({len(cases)})")
+    G = len(group_sizes)
+    caps = np.full(G, np.inf)
+    if group_caps_kw is not None:
+        if len(group_caps_kw) != G:
+            raise ValueError(f"group_caps_kw needs one entry per group "
+                             f"({G}), got {len(group_caps_kw)}")
+        caps = np.array([np.inf if c is None else float(c)
+                         for c in group_caps_kw])
+        if (caps <= 0.0).any():
+            raise ValueError("site caps must be positive kW (or None for "
+                             "uncoupled)")
+    office = np.zeros(G)
+    if group_office_kw is not None:
+        if len(group_office_kw) != G:
+            raise ValueError(f"group_office_kw needs one entry per group "
+                             f"({G}), got {len(group_office_kw)}")
+        office = np.array([float(o) for o in group_office_kw])
+    case_group = np.repeat(np.arange(G), group_sizes)
+    for g in np.flatnonzero(np.isfinite(caps)):
+        members = [cases[i] for i in np.flatnonzero(case_group == g)]
+        if len({c.start_hour for c in members}) > 1:
+            raise ValueError(
+                f"coupled group {g} mixes start_hours "
+                f"{sorted({c.start_hour for c in members})}: campaigns "
+                "under one site cap share the site's clock (their scan "
+                "grids must align slot for slot)")
+        if len({id(c.bands) for c in members}) > 1 and \
+                len({c.bands for c in members}) > 1:
+            raise ValueError(
+                f"coupled group {g} mixes TimeBands: campaigns under one "
+                "site share the site's band structure (the office draw "
+                "follows one background curve)")
 
     ensembles: List[Optional[SignalEnsemble]] = []
     for c in cases:
@@ -620,13 +730,22 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
     lane_periodic: List[bool] = []
     lane_co2: List[Tuple[Signal, ...]] = []
     case_expanded: List[bool] = []
+    lane_group: List[int] = []
     for i, (c, comp, ens) in enumerate(zip(cases, compiled, ensembles)):
         sched = as_schedule(c.schedule)
         expand = ens is not None and comp.carbon_dep
+        if expand and np.isfinite(caps[case_group[i]]):
+            raise ValueError(
+                f"case {c.name()!r}: a carbon-consulting schedule under a "
+                "carbon ensemble expands into per-member lanes, which "
+                "cannot share a site cap (each member lane is an "
+                "alternative scenario, not a concurrent campaign) — use a "
+                "carbon-blind schedule, a single trace, or drop the cap")
         case_expanded.append(expand)
         members = range(E) if expand else (0,)
         for e in members:
             lane_case.append(i)
+            lane_group.append(int(case_group[i]))
             lane_member.append(e)
             if expand:
                 # per-member decisions: rebuild the table (or builder)
@@ -700,7 +819,10 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
         s0=np.round(g0 * sph).astype(int) % H,
         bg_day=np.stack([_bg_table(cases[i].bands, sph)
                          for i in lane_case]),
-        est_h=max(comp.est_h for comp in compiled))
+        est_h=max(comp.est_h for comp in compiled),
+        group_sizes=group_sizes, case_group=case_group,
+        lane_group=np.asarray(lane_group, dtype=int),
+        group_cap_kw=caps, group_office_kw=office)
 
 
 # ---------------------------------------------------------------------------
@@ -774,6 +896,66 @@ def _scan_chunk_np(u_tab, b_tab, rowidx, bg, cf, pr, lens, state, scalars,
     return remaining, rt, kwh, co2, cost
 
 
+def _scan_chunk_np_coupled(u_tab, b_tab, rowidx, bg, cf, pr, lens,
+                           gid, cap_g, office, state, scalars,
+                           B: int) -> tuple:
+    """Site-coupled chunk on the NumPy backend: per slot, each group's
+    summed active draw is compared to its headroom (cap minus office)
+    and every member's intensity is curtailed by the one shared
+    `model.site_throttle` factor before the physics is re-evaluated —
+    identical arithmetic to the jitted coupled kernel."""
+    remaining, rt, kwh, co2, cost, speak = (a.copy() for a in state)
+    (n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac) = scalars
+    A, C = rowidx.shape
+    G = len(cap_g)
+    sidx = np.arange(A)
+    steps = 0
+    for t in range(C):
+        if not (remaining > 0.0).any():
+            break
+        steps += 1
+        prog = 1.0 - remaining / n_scen
+        u, bt = _bucket_lookup(np, u_tab, b_tab, sidx, rowidx[:, t], prog, B)
+        r = model.rates(u, bt, bg[:, t], rate_at_full=rate,
+                        batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
+                        alpha=alpha, gamma=gamma, overhead_w_frac=ohfrac,
+                        xp=np)
+        active = remaining > _FINISH_FRAC * n_scen
+        base_lane = np.where(
+            active, model.power_w(bg[:, t], idle, dyn, alpha, xp=np),
+            0.0) / 1000.0
+        base = np.bincount(gid, weights=base_lane, minlength=G)
+        head = cap_g - office[:, t]
+        f = np.ones(G)
+        r2 = r
+        for _ in range(model.SITE_THROTTLE_ITERS):
+            draw = np.bincount(
+                gid, weights=np.where(active, r2.p_avg_w, 0.0) / 1000.0,
+                minlength=G)
+            f = model.site_throttle(draw, base, head, f, xp=np)
+            r2 = model.rates(u * f[gid], bt, bg[:, t], rate_at_full=rate,
+                             batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
+                             alpha=alpha, gamma=gamma,
+                             overhead_w_frac=ohfrac, xp=np)
+        dt = np.where(
+            remaining > 0.0,
+            np.minimum(lens[:, t],
+                       remaining / np.maximum(r2.scen_per_s, 1e-30)),
+            0.0)
+        e = r2.kwh_per_s * dt
+        site_kw = np.bincount(
+            gid, weights=np.where(active, r2.p_avg_w, 0.0) / 1000.0,
+            minlength=G) + office[:, t]
+        speak = np.where(active, np.maximum(speak, site_kw[gid]), speak)
+        remaining = remaining - r2.scen_per_s * dt
+        rt = rt + dt
+        kwh = kwh + e
+        co2 = co2 + e[:, None] * cf[:, :, t]
+        cost = cost + e * pr[:, t]
+    _STATS.slot_work += A * steps
+    return remaining, rt, kwh, co2, cost, speak
+
+
 if _HAS_JAX:
     @functools.partial(jax.jit, static_argnames=("B",))
     def _scan_chunk_jax(u_tab, b_tab, rowidx, bg, cf, pr, lens,
@@ -806,6 +988,59 @@ if _HAS_JAX:
         final, _ = jax.lax.scan(step, init, xs)
         return final
 
+    @functools.partial(jax.jit, static_argnames=("B", "G"))
+    def _scan_chunk_jax_coupled(u_tab, b_tab, rowidx, bg, cf, pr, lens,
+                                gid, cap_g, office,
+                                remaining, rt, kwh, co2, cost, speak,
+                                n_scen, rate, oh, idle, dyn, alpha, gamma,
+                                ohfrac, B: int, G: int):
+        A = u_tab.shape[0]
+        sidx = jnp.arange(A)
+
+        def step(carry, xs):
+            remaining, rt, kwh, co2, cost, speak = carry
+            row, bg_t, cf_t, pr_t, ln, off_t = xs      # off_t: (G,)
+            prog = 1.0 - remaining / n_scen
+            u, bt = _bucket_lookup(jnp, u_tab, b_tab, sidx, row, prog, B)
+            r = model.rates(u, bt, bg_t, rate_at_full=rate,
+                            batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
+                            alpha=alpha, gamma=gamma, overhead_w_frac=ohfrac,
+                            xp=jnp)
+            active = remaining > _FINISH_FRAC * n_scen
+            base_lane = jnp.where(
+                active, model.power_w(bg_t, idle, dyn, alpha, xp=jnp),
+                0.0) / 1000.0
+            base = jnp.zeros(G, base_lane.dtype).at[gid].add(base_lane)
+            head = cap_g - off_t
+            f = jnp.ones(G, base_lane.dtype)
+            r2 = r
+            for _ in range(model.SITE_THROTTLE_ITERS):
+                draw = jnp.zeros(G, base_lane.dtype).at[gid].add(
+                    jnp.where(active, r2.p_avg_w, 0.0) / 1000.0)
+                f = model.site_throttle(draw, base, head, f, xp=jnp)
+                r2 = model.rates(u * f[gid], bt, bg_t, rate_at_full=rate,
+                                 batch_overhead_s=oh, idle_w=idle,
+                                 dyn_w=dyn, alpha=alpha, gamma=gamma,
+                                 overhead_w_frac=ohfrac, xp=jnp)
+            dt = jnp.where(
+                remaining > 0.0,
+                jnp.minimum(ln,
+                            remaining / jnp.maximum(r2.scen_per_s, 1e-30)),
+                0.0)
+            e = r2.kwh_per_s * dt
+            site_kw = jnp.zeros(G, base_lane.dtype).at[gid].add(
+                jnp.where(active, r2.p_avg_w, 0.0) / 1000.0) + off_t
+            speak = jnp.where(active, jnp.maximum(speak, site_kw[gid]),
+                              speak)
+            carry = (remaining - r2.scen_per_s * dt, rt + dt, kwh + e,
+                     co2 + e[:, None] * cf_t, cost + e * pr_t, speak)
+            return carry, None
+
+        init = (remaining, rt, kwh, co2, cost, speak)
+        xs = (rowidx.T, bg.T, cf.transpose(2, 0, 1), pr.T, lens.T, office.T)
+        final, _ = jax.lax.scan(step, init, xs)
+        return final
+
 
 def _pad_pow2(n: int, minimum: int = 8) -> int:
     return max(minimum, 1 << max(n - 1, 0).bit_length())
@@ -815,7 +1050,14 @@ def _run_chunk(plan: SweepPlan, active: np.ndarray, inputs, state_slices,
                use_jax: bool) -> tuple:
     """Execute one chunk for the active lanes, padding the batch to
     bucketed shapes on the JAX backend so repeated sweeps reuse the
-    compiled kernel instead of recompiling per exact size."""
+    compiled kernel instead of recompiling per exact size.
+
+    Site-coupled plans (any finite group cap) route to the grouped
+    kernel; everything else takes the exact pre-fleet code path, so
+    plain sweeps stay byte-identical."""
+    if plan.coupled:
+        return _run_chunk_coupled(plan, active, inputs, state_slices,
+                                  use_jax)
     u_tab, b_tab, rowidx, bg, cf, pr, lens = inputs
     A, C = rowidx.shape
     Bg = u_tab.shape[2]
@@ -858,6 +1100,78 @@ def _run_chunk(plan: SweepPlan, active: np.ndarray, inputs, state_slices,
                                        lens)),
             *(jnp.asarray(a) for a in state_slices),
             *(jnp.asarray(a) for a in scalars), B=Bg)
+    out = tuple(np.asarray(o) for o in out)
+    if Ap != A:
+        out = tuple(o[:A] for o in out)
+    return out
+
+
+def _run_chunk_coupled(plan: SweepPlan, active: np.ndarray, inputs,
+                       state_slices, use_jax: bool) -> tuple:
+    """One chunk through the grouped site-coupled kernel.
+
+    Active lanes' groups are remapped to dense ids (finished groups
+    drop out with their lanes); group count and lane count are both
+    padded to power-of-two buckets on the JAX backend, with padded
+    lanes assigned a dummy uncapped group, so the jitted kernel's
+    shape-signature set stays small as the fleet drains."""
+    u_tab, b_tab, rowidx, bg, cf, pr, lens = inputs
+    A, C = rowidx.shape
+    Bg = u_tab.shape[2]
+    scalars = tuple(arr[active] for arr in
+                    (plan.n_scen, plan.rate, plan.oh, plan.idle, plan.dyn,
+                     plan.alpha, plan.gamma, plan.ohfrac))
+    uniq, first, gid = np.unique(plan.lane_group[active],
+                                 return_index=True, return_inverse=True)
+    Gd = len(uniq)
+    gid = gid.astype(np.int32)
+    cap_g = plan.group_cap_kw[uniq]
+    # each group's office draw follows its own band background over the
+    # chunk (group members share bands — validated at compile time)
+    office = plan.group_office_kw[uniq][:, None] * bg[first]      # (Gd, C)
+    _STATS.grouped_lanes += A
+    if not use_jax:
+        out = _scan_chunk_np_coupled(u_tab, b_tab, rowidx, bg, cf, pr, lens,
+                                     gid, cap_g, office, state_slices,
+                                     scalars, Bg)
+        _STATS.chunks += 1
+        return out
+
+    Ap = _pad_pow2(A)
+    if Ap != A:
+        pad = Ap - A
+
+        def padv(a, fill=0.0):
+            w = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+            return np.pad(a, w, constant_values=fill)
+
+        u_tab, rowidx, bg, cf, pr = (padv(x) for x in
+                                     (u_tab, rowidx, bg, cf, pr))
+        b_tab = padv(b_tab, 1.0)
+        lens = padv(lens, 3600.0 / plan.sph)
+        gid = padv(gid, Gd)               # dummy (uncapped) group
+        remaining, rt, kwh, co2, cost, speak = state_slices
+        state_slices = (padv(remaining), padv(rt), padv(kwh), padv(co2),
+                        padv(cost), padv(speak))
+        n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac = scalars
+        scalars = (padv(n_scen, 1.0), padv(rate), padv(oh), padv(idle),
+                   padv(dyn), padv(alpha, 1.0), padv(gamma),
+                   padv(ohfrac))
+    Gp = _pad_pow2(Gd + 1, minimum=2)     # +1: the dummy group always fits
+    cap_g = np.pad(cap_g, (0, Gp - Gd), constant_values=np.inf)
+    office = np.pad(office, ((0, Gp - Gd), (0, 0)))
+    sig = (Ap, u_tab.shape[1], Bg, C, cf.shape[1], Gp,
+           plan.price is not None, "coupled")
+    _STATS.jit_shapes.add(sig)
+    _STATS.chunks += 1
+    _STATS.slot_work += Ap * C
+    with enable_x64():
+        out = _scan_chunk_jax_coupled(
+            *(jnp.asarray(a) for a in (u_tab, b_tab, rowidx, bg, cf, pr,
+                                       lens)),
+            jnp.asarray(gid), jnp.asarray(cap_g), jnp.asarray(office),
+            *(jnp.asarray(a) for a in state_slices),
+            *(jnp.asarray(a) for a in scalars), B=Bg, G=Gp)
     out = tuple(np.asarray(o) for o in out)
     if Ap != A:
         out = tuple(o[:A] for o in out)
@@ -973,11 +1287,13 @@ def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
         return _execute_monolithic(plan, use_jax)
 
     C = int(chunk_days or DEFAULT_CHUNK_DAYS) * H
+    coupled = plan.coupled
     remaining = plan.n_scen.copy()
     rt = np.zeros(L)
     kwh = np.zeros(L)
     co2 = np.zeros((L, plan.E))
     cost = np.zeros(L)
+    speak = np.zeros(L) if coupled else None
     active = np.arange(L)
     t0 = 0
     while active.size:
@@ -985,11 +1301,16 @@ def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
         inputs = _chunk_inputs(plan, active, t0, C_eff)
         state = (remaining[active], rt[active], kwh[active], co2[active],
                  cost[active])
+        if coupled:
+            state = state + (speak[active],)
         before = remaining[active].copy()
         out = _run_chunk(plan, active, inputs, state, use_jax)
+        if coupled:
+            speak[active] = out[5]
         remaining[active], rt[active], kwh[active], co2[active], \
-            cost[active] = out
-        unfinished = remaining[active] > 1e-6 * plan.n_scen[active]
+            cost[active] = out[:5]
+        unfinished = (remaining[active]
+                      > _FINISH_FRAC * plan.n_scen[active])
         if C_eff >= H:
             made = before - remaining[active]
             days = C_eff / H
@@ -1011,7 +1332,7 @@ def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
                 f"max_days={plan.max_days} on the trace grid (remaining "
                 f"{remaining[worst]:.0f} of {plan.n_scen[worst]:.0f} "
                 "scenarios); its schedule may be stalled at zero intensity")
-    return _ScanState(remaining, rt, kwh, co2, cost)
+    return _ScanState(remaining, rt, kwh, co2, cost, speak)
 
 
 def _execute_monolithic(plan: SweepPlan, use_jax: bool) -> _ScanState:
@@ -1026,13 +1347,16 @@ def _execute_monolithic(plan: SweepPlan, use_jax: bool) -> _ScanState:
         inputs = _chunk_inputs(plan, all_lanes, 0, T)
         state = (plan.n_scen.copy(), np.zeros(L), np.zeros(L),
                  np.zeros((L, plan.E)), np.zeros(L))
+        if plan.coupled:
+            state = state + (np.zeros(L),)
         out = _run_chunk(plan, all_lanes, inputs, state, use_jax)
         remaining = out[0]
-        if (remaining <= 1e-6 * plan.n_scen).all():
+        if (remaining <= _FINISH_FRAC * plan.n_scen).all():
             return _ScanState(*out)
         if T >= H:
             made = plan.n_scen - remaining
-            stalled = ((remaining > 1e-6 * plan.n_scen) & plan.lane_periodic
+            stalled = ((remaining > _FINISH_FRAC * plan.n_scen)
+                       & plan.lane_periodic
                        & (made <= _STALL_FRAC_PER_DAY * (T / H)
                           * plan.n_scen))
             if stalled.any():
@@ -1342,6 +1666,248 @@ def evaluate_params(params, case, *, u_min: float = 0.05, u_max: float = 1.0,
     return obj.evaluate(u)
 
 
+class FleetEvalMetrics(NamedTuple):
+    """Joint outcome of M concurrent campaigns as a differentiable
+    pytree: per-campaign fields carry a trailing (..., M) axis,
+    `site_peak_kw` is the site-level scalar (..., ) — the peak total
+    site draw (office + all campaigns) over the horizon, the quantity a
+    `site_peak_kw <= cap` constraint caps."""
+    energy_kwh: Any          # (..., M)
+    co2_kg: Any              # (..., M)
+    runtime_h: Any           # (..., M)
+    cost_usd: Any            # (..., M)
+    unfinished: Any          # (..., M)
+    site_peak_kw: Any        # (...,)
+
+
+class FleetTraceObjective:
+    """M concurrent campaigns under one site as a pure objective.
+
+    The fleet analogue of `TraceObjective`: construction samples the
+    shared signals over a fixed horizon; `evaluate(u)` maps a joint
+    intensity block of shape (..., M, n_slots) — campaign m's day
+    schedule in row m — to `FleetEvalMetrics` of shape (..., M)/(...,).
+    Each slot applies the one site-coupling definition
+    (`model.site_throttle`): demands are decided from the intensity
+    tables, the summed active draw is compared to the site headroom
+    (cap minus office draw, which follows the band background), every
+    campaign's intensity is curtailed by the shared factor, and the
+    physics re-evaluated — exactly what the grouped-lane chunk kernels
+    and the sequential fleet oracle do, so optimized schedules report
+    identically through the real engine.
+
+    Differentiable end to end on the JAX backend (the throttle's
+    min/max and the running site-peak max carry subgradients), with the
+    same strict finish-branch selection as `TraceObjective`; the NumPy
+    backend runs the identical scan as a loop.  `site_cap_kw=None`
+    evaluates the uncoupled fleet (throttle factor pinned at 1) while
+    still reporting `site_peak_kw`, so a planner can satisfy a peak cap
+    by *scheduling* around it rather than relying on reactive
+    curtailment.  Carbon ensembles are not supported here (fleet
+    robustness composes poorly with joint curtailment; sweep the
+    optimized schedules against an ensemble instead).
+    """
+
+    def __init__(self, cases: Sequence, *,
+                 site_cap_kw: Optional[float] = None,
+                 office_kw: float = 0.0,
+                 price: Optional[Signal] = None,
+                 slots_per_hour: int = 1,
+                 horizon_h: Optional[float] = None,
+                 batch_size: float = 50.0, max_days: int = 120,
+                 backend: Optional[str] = None):
+        if not len(cases):
+            raise ValueError("FleetTraceObjective needs at least one case")
+        if len({c.start_hour for c in cases}) > 1:
+            raise ValueError("fleet campaigns share the site clock: all "
+                             "cases must have the same start_hour")
+        if len({c.bands for c in cases}) > 1:
+            raise ValueError("fleet campaigns share the site's TimeBands "
+                             "(one background/office curve); got differing "
+                             "bands across cases")
+        if any(isinstance(c.carbon, SignalEnsemble) for c in cases):
+            raise ValueError("FleetTraceObjective does not take carbon "
+                             "ensembles; optimize against one trace and "
+                             "sweep the result against the ensemble")
+        sph = int(slots_per_hour)
+        self.cases = tuple(cases)
+        self.M = len(cases)
+        self.sph = sph
+        self.n_slots = 24 * sph
+        self.batch_size = float(batch_size)
+        self.site_cap_kw = (float(site_cap_kw) if site_cap_kw is not None
+                            else None)
+        self.office_kw = float(office_kw)
+        self.has_price = price is not None
+        self.use_jax = _use_jax(backend)
+        self._jit = None
+
+        case0 = cases[0]
+        self._scalars = tuple(
+            np.array([getattr(c.workload, wkey) for c in cases])
+            for wkey in ("n_scenarios", "rate_at_full", "batch_overhead_s")
+        ) + tuple(
+            np.array([getattr(c.machine, mkey) for c in cases])
+            for mkey in ("idle_w", "dyn_w", "alpha", "gamma",
+                         "overhead_w_frac"))
+        self.deadlines_h = np.array([float(c.deadline_h) for c in cases])
+
+        carbon = case0.carbon or GridCarbonModel()
+        start = float(case0.start_hour)
+        g0 = math.floor(start * sph) / sph
+        bg_day = _bg_table(case0.bands, sph)
+        if horizon_h is None:
+            horizon_h = self._default_horizon(bg_day, max_days)
+        self.horizon_h = float(min(horizon_h, max_days * 24.0))
+        T = max(int(math.ceil(self.horizon_h * sph)), 1)
+        slot = np.arange(T)
+        t_abs = g0 + slot / sph
+        s0 = int(round(g0 * sph)) % self.n_slots
+        self.rowidx = ((s0 + slot) % self.n_slots).astype(np.int32)
+        self.bg = bg_day[self.rowidx]
+        self.cf = sample_signal(carbon_signal(carbon), t_abs)
+        self.pr = (sample_signal(price, t_abs) if price is not None
+                   else np.zeros(T))
+        lens = np.full(T, 3600.0 / sph)
+        lens[0] = (g0 + 1.0 / sph - start) * 3600.0
+        self.lens = lens
+        self.office = self.office_kw * self.bg          # (T,) kW
+        cap = np.inf if self.site_cap_kw is None else self.site_cap_kw
+        self.headroom = cap - self.office               # (T,) kW
+
+    def _default_horizon(self, bg_day: np.ndarray, max_days: int) -> float:
+        """Slowest standalone campaign at mid intensity, stretched by the
+        demanded-draw vs headroom ratio (a capped fleet runs longer than
+        any member would alone), or the largest deadline with margin."""
+        durs = []
+        draw_kw = 0.0
+        for c in self.cases:
+            r = model.campaign_rates(0.35, self.batch_size,
+                                     float(bg_day.mean()), c.workload,
+                                     c.machine)
+            durs.append(c.workload.n_scenarios
+                        / max(r.scen_per_s, 1e-9) / 3600.0)
+            draw_kw += r.p_avg_w / 1000.0
+        stretch = 1.0
+        if self.site_cap_kw is not None:
+            head = max(self.site_cap_kw - self.office_kw * 0.3, 1e-9)
+            stretch = max(draw_kw / head, 1.0)
+        est = max(durs) * 1.6 * stretch + 48.0
+        dl = float(self.deadlines_h.max(initial=0.0))
+        if dl > 0.0:
+            est = max(est, dl * 1.25 + 24.0)
+        return min(est, max_days * 24.0)
+
+    # ------------------------------------------------------------------
+    def evaluate(self, u) -> FleetEvalMetrics:
+        """`FleetEvalMetrics` for a joint intensity block (..., M,
+        n_slots); pure and traceable on the JAX backend."""
+        if self.use_jax and not isinstance(u, np.ndarray):
+            return self._evaluate_jax(u)
+        return self._evaluate_np(np.asarray(u, dtype=float))
+
+    def evaluate_batch(self, U) -> FleetEvalMetrics:
+        """Concrete (NumPy) metrics for an (N, M, n_slots) population,
+        one jitted call on the JAX backend."""
+        U = np.asarray(U, dtype=float)
+        if not self.use_jax:
+            return self._evaluate_np(U)
+        if self._jit is None:
+            self._jit = jax.jit(self._evaluate_jax)
+        with enable_x64():
+            out = self._jit(jnp.asarray(U))
+        return FleetEvalMetrics(*(np.asarray(x) for x in out))
+
+    # ------------------------------------------------------------------
+    def _rates(self, u, bg_t, xp):
+        (_, rate, oh, idle, dyn, alpha, gamma, ohfrac) = self._scalars
+        if xp is not np:
+            rate, oh, idle, dyn, alpha, gamma, ohfrac = (
+                xp.asarray(a) for a in (rate, oh, idle, dyn, alpha, gamma,
+                                        ohfrac))
+        return model.rates(u, self.batch_size, bg_t, rate_at_full=rate,
+                           batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
+                           alpha=alpha, gamma=gamma, overhead_w_frac=ohfrac,
+                           xp=xp)
+
+    def _step(self, carry, u, bg_t, cf_t, pr_t, ln, off_t, head_t, xp):
+        """One slot of the coupled fleet scan — the one definition both
+        backends share (xp = np or jnp)."""
+        remaining, rt, kwh, co2, cost, peak = carry
+        n_scen = (self._scalars[0] if xp is np
+                  else xp.asarray(self._scalars[0]))
+        r = self._rates(u, bg_t, xp)
+        active = remaining > _FINISH_FRAC * n_scen
+        if self.site_cap_kw is None:
+            # uncoupled: skip the solve — an infinite headroom would pin
+            # f = 1 but still poison gradients with inf in the chain rule
+            r2 = r
+        else:
+            (_, _, _, idle, dyn, alpha, _, _) = self._scalars
+            base = (xp.where(active,
+                             model.power_w(bg_t, idle, dyn, alpha, xp=xp),
+                             0.0) / 1000.0).sum(axis=-1)
+            f = xp.ones(base.shape) if hasattr(base, "shape") else 1.0
+            r2 = r
+            for _ in range(model.SITE_THROTTLE_ITERS):
+                fleet_kw = (xp.where(active, r2.p_avg_w, 0.0)
+                            / 1000.0).sum(axis=-1)
+                f = model.site_throttle(fleet_kw, base, head_t, f, xp=xp)
+                r2 = self._rates(u * f[..., None], bg_t, xp)
+        scen = xp.maximum(r2.scen_per_s, 1e-30)
+        # strict finish-branch selection (see TraceObjective): the tie
+        # must take the finish branch, where the gradient cancellation
+        # of the residual is analytic
+        dt = xp.where(remaining > scen * ln, ln, remaining / scen)
+        dt = xp.where(remaining > 0.0, dt, 0.0)
+        e = r2.kwh_per_s * dt
+        site_kw = (xp.where(active, r2.p_avg_w, 0.0) / 1000.0
+                   ).sum(axis=-1) + off_t
+        peak = xp.maximum(peak, site_kw)
+        return (remaining - r2.scen_per_s * dt, rt + dt, kwh + e,
+                co2 + e * cf_t, cost + e * pr_t, peak)
+
+    def _evaluate_jax(self, u) -> FleetEvalMetrics:
+        n_scen = jnp.asarray(self._scalars[0])
+        u = jnp.asarray(u)
+        u_t = jnp.moveaxis(u[..., jnp.asarray(self.rowidx)], -1, 0)
+        shape = u.shape[:-1]                      # (..., M)
+
+        def step(carry, xs):
+            u_s, bg_t, cf_t, pr_t, ln, off_t, head_t = xs
+            return self._step(carry, u_s, bg_t, cf_t, pr_t, ln, off_t,
+                              head_t, jnp), None
+
+        zero = jnp.zeros(shape)
+        init = (jnp.broadcast_to(n_scen * 1.0, shape), zero, zero, zero,
+                zero, jnp.zeros(shape[:-1]))
+        xs = (u_t, jnp.asarray(self.bg), jnp.asarray(self.cf),
+              jnp.asarray(self.pr), jnp.asarray(self.lens),
+              jnp.asarray(self.office), jnp.asarray(self.headroom))
+        (remaining, rt, kwh, co2, cost, peak), _ = jax.lax.scan(
+            step, init, xs)
+        return FleetEvalMetrics(kwh, co2, rt / 3600.0, cost,
+                                remaining / n_scen, peak)
+
+    def _evaluate_np(self, u: np.ndarray) -> FleetEvalMetrics:
+        n_scen = self._scalars[0]
+        u_t = u[..., self.rowidx]                 # (..., M, T)
+        shape = u.shape[:-1]
+        carry = (np.broadcast_to(n_scen, shape).astype(float).copy(),
+                 np.zeros(shape), np.zeros(shape), np.zeros(shape),
+                 np.zeros(shape), np.zeros(shape[:-1]))
+        for t in range(len(self.lens)):
+            if not (carry[0] > 0.0).any():
+                break
+            carry = self._step(carry, u_t[..., t], float(self.bg[t]),
+                               float(self.cf[t]), float(self.pr[t]),
+                               float(self.lens[t]), float(self.office[t]),
+                               float(self.headroom[t]), np)
+        remaining, rt, kwh, co2, cost, peak = carry
+        return FleetEvalMetrics(kwh, co2, rt / 3600.0, cost,
+                                remaining / n_scen, peak)
+
+
 def _use_jax(backend: Optional[str]) -> bool:
     if backend == "numpy":
         return False
@@ -1357,7 +1923,11 @@ def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
                 slots_per_hour: int = 1, progress_buckets: int = 32,
                 max_days: int = 120, backend: Optional[str] = None,
                 chunk_days: Optional[int] = None,
-                mode: str = "chunked") -> List[SimResult]:
+                mode: str = "chunked",
+                group_sizes: Optional[Sequence[int]] = None,
+                group_caps_kw: Optional[Sequence[Optional[float]]] = None,
+                group_office_kw: Optional[Sequence[float]] = None
+                ) -> List[SimResult]:
     """Evaluate cases on the trace grid; order is preserved.
 
     Compile -> execute -> summarize: the case batch is lowered into a
@@ -1375,11 +1945,18 @@ def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
     `mode="monolithic"` runs the pre-chunking single-scan/retry-doubling
     executor (identical results; kept for equivalence tests and the
     wasted-work benchmark).
+
+    `group_sizes`/`group_caps_kw`/`group_office_kw` partition the cases
+    into fleet groups sharing a site power envelope (see `compile_plan`);
+    `repro.core.fleet.fleet_sweep` is the session-level entry that also
+    returns per-group site rollups.
     """
     if not len(cases):
         return []
     plan = compile_plan(cases, price, slots_per_hour=slots_per_hour,
-                        progress_buckets=progress_buckets, max_days=max_days)
+                        progress_buckets=progress_buckets, max_days=max_days,
+                        group_sizes=group_sizes, group_caps_kw=group_caps_kw,
+                        group_office_kw=group_office_kw)
     state = execute_plan(plan, backend=backend, chunk_days=chunk_days,
                          mode=mode)
     return summarize_plan(plan, state)

@@ -37,7 +37,19 @@ RATE_EPS = 1e-9
 
 # Scalar namespace: Python-float arithmetic, bit-identical to the
 # historical `max(...)`-based scalar code in the sequential simulators.
-SCALAR = SimpleNamespace(maximum=lambda a, b: a if a > b else b)
+SCALAR = SimpleNamespace(maximum=lambda a, b: a if a > b else b,
+                         minimum=lambda a, b: a if a < b else b)
+
+# A site-throttled campaign's worker intensity never drops below 5% of
+# its demand (the curtailment sheds worker load, not the whole machine;
+# same floor philosophy as CONTENTION_FLOOR).
+SITE_THROTTLE_FLOOR = 0.05
+
+# Fixed-point steps of the curtailment solve per slot.  The sheddable-
+# power update below converges geometrically (site draw within ~0.1% of
+# a reachable cap in 3-4 steps); a fixed count keeps the jitted kernels
+# shape-stable and every consumer bit-consistent.
+SITE_THROTTLE_ITERS = 4
 
 
 def power_w(load: Any, idle_w: Any, dyn_w: Any, alpha: Any,
@@ -97,5 +109,41 @@ def campaign_rates(u: Any, batch_size: Any, background: Any,
                  overhead_w_frac=machine.overhead_w_frac, xp=xp)
 
 
-__all__ = ["CONTENTION_FLOOR", "RATE_EPS", "SCALAR", "Rates", "power_w",
-           "rates", "campaign_rates"]
+def site_throttle(fleet_kw: Any, base_kw: Any, headroom_kw: Any,
+                  f: Any = 1.0, xp=SCALAR) -> Any:
+    """THE definition of site-coupled contention between concurrent
+    campaigns sharing one power envelope: one damped fixed-point step of
+    the shared curtailment factor.
+
+    When the summed draw of a fleet's *active* campaigns (`fleet_kw`,
+    evaluated at the current factor `f`) exceeds the site headroom
+    (site cap minus office draw), every campaign's worker intensity is
+    curtailed by the same factor.  Because most of a machine's draw is
+    not sheddable (idle power plus the background-induced term,
+    `base_kw` = Σ power_w(background) over active campaigns), the update
+    iterates on the *sheddable* component:
+
+        f' = clip(f * (headroom - base) / (fleet_kw - base),
+                  SITE_THROTTLE_FLOOR, 1.0)
+
+    Consumers apply exactly `SITE_THROTTLE_ITERS` steps per slot,
+    re-evaluating the fleet draw at each step's factor — the sequential
+    fleet oracle (core/fleet.py), the grouped-lane chunk kernels
+    (core/engine_jax.py), and `FleetTraceObjective` all run this same
+    loop, so they agree bit for bit.  A reachable cap is met to ~0.1 %;
+    an unreachable one (headroom below the non-sheddable draw) pins the
+    floor, so campaigns trickle instead of deadlocking and the reported
+    site peak honestly exceeds the cap.  Each campaign's effective
+    throughput R_eff then scales with the final factor — the
+    per-campaign r_eff depends on the *summed* fleet power vs the cap.
+    Polymorphic over the array namespace like the rest of the model.
+    """
+    shed_target = xp.maximum(headroom_kw - base_kw, 0.0)
+    shed = xp.maximum(fleet_kw - base_kw, RATE_EPS)
+    return xp.maximum(xp.minimum(f * shed_target / shed, 1.0),
+                      SITE_THROTTLE_FLOOR)
+
+
+__all__ = ["CONTENTION_FLOOR", "RATE_EPS", "SCALAR", "SITE_THROTTLE_FLOOR",
+           "SITE_THROTTLE_ITERS", "Rates", "power_w", "rates",
+           "campaign_rates", "site_throttle"]

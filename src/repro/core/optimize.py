@@ -46,11 +46,15 @@ from repro.core.schedule import ParametricSchedule
 from repro.core.simulator import SimResult
 
 #: Metrics an objective may weight or cap, with their accepted aliases.
+#: `site_peak_kw` is fleet-level only (`optimize_fleet`): the peak total
+#: site draw over the horizon.
 METRIC_ALIASES: Dict[str, str] = {
     "energy": "energy_kwh", "energy_kwh": "energy_kwh", "kwh": "energy_kwh",
     "co2": "co2_kg", "co2_kg": "co2_kg", "carbon": "co2_kg",
     "runtime": "runtime_h", "runtime_h": "runtime_h", "deadline": "runtime_h",
     "cost": "cost_usd", "cost_usd": "cost_usd", "price": "cost_usd",
+    "site_peak_kw": "site_peak_kw", "peak_kw": "site_peak_kw",
+    "site_peak": "site_peak_kw",
 }
 METRIC_KEYS: Tuple[str, ...] = ("energy_kwh", "co2_kg", "runtime_h",
                                 "cost_usd")
@@ -261,19 +265,17 @@ def _result_from_metrics(name: str, m: EvalMetrics,
 # ---------------------------------------------------------------------------
 # Search modes
 # ---------------------------------------------------------------------------
-def _grad_search(to: TraceObjective, objective: Objective, scales, p0,
-                 u_min: float, u_max: float, steps: int, lr: float
+def _grad_search(loss, p0, steps: int, lr: float
                  ) -> Tuple[np.ndarray, List[float], int]:
-    """Adam on the logits, gradients through the scan.  Returns the best
-    parameters seen (not the last iterate — the loss is nonconvex)."""
+    """Adam on the logits, gradients through the scan.  `loss` maps a
+    (traced jnp) parameter vector to the scalar objective — the single-
+    campaign and joint-fleet searches differ only in that closure.
+    Returns the best parameters seen (not the last iterate — the loss
+    is nonconvex)."""
     import jax
     import jax.numpy as jnp
 
     from repro.compat import enable_x64
-
-    def loss(p):
-        u = ParametricSchedule.u_from_logits(p, u_min, u_max, xp=jnp)
-        return scalarize(to.evaluate(u), objective, scales, xp=jnp)
 
     value_and_grad = jax.jit(jax.value_and_grad(loss))
     b1, b2, eps = 0.9, 0.999, 1e-8
@@ -307,18 +309,17 @@ def _grad_search(to: TraceObjective, objective: Objective, scales, p0,
         return np.asarray(best_p), history, steps
 
 
-def _cem_search(to: TraceObjective, objective: Objective, scales, p0,
-                u_min: float, u_max: float, candidates: int, iterations: int,
+def _cem_search(evaluate, p0, candidates: int, iterations: int,
                 elite_frac: float, init_std: float, smoothing: float,
-                seed: int, collect: Optional[list],
-                levels: Optional[np.ndarray] = None
-                ) -> Tuple[np.ndarray, List[float], int]:
+                seed: int) -> Tuple[np.ndarray, List[float], int]:
     """Cross-entropy method over the logits: sample a Gaussian population,
-    evaluate all candidates in one vmapped/jitted call (`evaluate_batch`),
-    refit mean/std on the elites.  Needs no gradients, so it runs on the
-    NumPy backend too and survives quantized intensity levels: with
-    `levels` set, candidates are snapped *before* evaluation, so the
-    search optimizes the same quantized objective the result reports —
+    evaluate all candidates in one call, refit mean/std on the elites.
+    `evaluate` maps an (N, D) logit population to (N,) objective values
+    (one vmapped/jitted `evaluate_batch` underneath; the closure owns
+    level snapping and Pareto collection).  Needs no gradients, so it
+    runs on the NumPy backend too and survives quantized intensity
+    levels: candidates are snapped *before* evaluation, so the search
+    optimizes the same quantized objective the result reports —
     snapping only the final answer could silently break the constraints
     the smooth search satisfied."""
     rng = np.random.RandomState(seed)
@@ -332,14 +333,7 @@ def _cem_search(to: TraceObjective, objective: Objective, scales, p0,
         pop = mean[None, :] + std[None, :] * rng.randn(candidates, n)
         pop[0] = mean                     # incumbent mean
         pop[1] = best_p                   # elitism: best-so-far survives
-        u = ParametricSchedule.u_from_logits(pop, u_min, u_max, xp=np)
-        if levels is not None:            # same snap as the final schedule
-            u = levels[np.argmin(np.abs(u[..., None]
-                                        - levels[None, None, :]), axis=-1)]
-        mets = to.evaluate_batch(u)
-        vals = np.asarray(scalarize(mets, objective, scales, xp=np))
-        if collect is not None:
-            collect.append((pop.copy(), mets))
+        vals = np.asarray(evaluate(pop))
         order = np.argsort(vals)
         if vals[order[0]] < best_val:
             best_val = float(vals[order[0]])
@@ -474,13 +468,29 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
     n_evals = 0
     history: List[float] = []
     if "cem" in method:
+        def eval_pop(pop):
+            u = ParametricSchedule.u_from_logits(pop, u_min, u_max, xp=np)
+            if lv is not None:            # same snap as the final schedule
+                u = lv[np.argmin(np.abs(u[..., None]
+                                        - lv[None, None, :]), axis=-1)]
+            mets = to.evaluate_batch(u)
+            vals = np.asarray(scalarize(mets, obj, scales, xp=np))
+            if collect is not None:
+                collect.append((pop.copy(), mets))
+            return vals
+
         best_p, history, n_evals = _cem_search(
-            to, obj, scales, p0, u_min, u_max, candidates, iterations,
-            elite_frac, init_std, smoothing, seed, collect, levels=lv)
+            eval_pop, p0, candidates, iterations, elite_frac, init_std,
+            smoothing, seed)
         p0 = best_p                       # grad polish starts from the
     if "grad" in method:                  # population's best candidate
-        best_p, ghist, gevals = _grad_search(
-            to, obj, scales, p0, u_min, u_max, steps, lr)
+        import jax.numpy as jnp
+
+        def grad_loss(p):
+            u = ParametricSchedule.u_from_logits(p, u_min, u_max, xp=jnp)
+            return scalarize(to.evaluate(u), obj, scales, xp=jnp)
+
+        best_p, ghist, gevals = _grad_search(grad_loss, p0, steps, lr)
         start = history[-1] if history else math.inf
         history += [min(v, start) for v in ghist]
         n_evals += gevals
@@ -539,6 +549,268 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
                           frontier=frontier, co2_ensemble=co2_members)
 
 
-__all__ = ["METRIC_KEYS", "ROBUST_MODES", "Objective", "OptimizeResult",
-           "canonical_metric", "optimize_schedule", "pareto_front",
-           "reduce_ensemble", "scalarize"]
+# ---------------------------------------------------------------------------
+# Joint fleet optimization (the M-campaigns axis)
+# ---------------------------------------------------------------------------
+def scalarize_fleet(fm, objective: Objective, scales: Mapping[str, float],
+                    deadlines=None, xp=np):
+    """The scalar loss of a joint fleet schedule (FleetEvalMetrics in,
+    float or (...,) array out; polymorphic over NumPy/jnp).
+
+    Weighted metrics act on *site totals* (summed over campaigns);
+    `site_peak_kw` weights/caps act on the site-level peak draw; a
+    `runtime_h` cap and the per-campaign `deadlines` act per campaign
+    (campaigns run concurrently — a sum of runtimes means nothing).
+    Unfinished campaigns are penalized per member, like the single-
+    campaign `scalarize`.
+    """
+    site = {k: getattr(fm, k).sum(axis=-1)
+            for k in ("energy_kwh", "co2_kg", "cost_usd")}
+    val = 0.0
+    for k, w in objective.weights.items():
+        if k == "site_peak_kw":
+            val = val + w * fm.site_peak_kw / scales[k]
+        elif k == "runtime_h":
+            # makespan: the fleet is done when its last campaign is
+            val = val + w * fm.runtime_h.max(axis=-1) / scales[k]
+        else:
+            val = val + w * site[k] / scales[k]
+    for k, cap in objective.constraints.items():
+        if k == "site_peak_kw":
+            val = val + objective.penalty * xp.maximum(
+                fm.site_peak_kw / cap - 1.0, 0.0)
+        elif k == "runtime_h":
+            val = val + objective.penalty * xp.maximum(
+                fm.runtime_h / cap - 1.0, 0.0).sum(axis=-1)
+        else:
+            val = val + objective.penalty * xp.maximum(
+                site[k] / cap - 1.0, 0.0)
+    if deadlines is not None:
+        dl = np.asarray(deadlines, dtype=float)
+        dl = np.where(dl > 0.0, dl, np.inf)
+        val = val + objective.penalty * xp.maximum(
+            fm.runtime_h / dl - 1.0, 0.0).sum(axis=-1)
+    return val + objective.unfinished_penalty * xp.maximum(
+        fm.unfinished - 1e-9, 0.0).sum(axis=-1)
+
+
+@dataclasses.dataclass
+class FleetOptimizeResult:
+    """What a joint fleet-schedule search hands back.
+
+    `schedules[m]` is campaign m's optimized `ParametricSchedule` (a
+    drop-in Schedule); `results`/`site` are the per-campaign
+    `SimResult`s and site rollup as evaluated by the real grouped-lane
+    engine under the site cap; `independent` (when the search
+    warm-started from per-campaign optima) holds those standalone
+    `OptimizeResult`s for comparison.
+    """
+    schedules: List[ParametricSchedule]
+    results: List[SimResult]
+    site: object                          # fleet.SiteRollup
+    value: float
+    metrics: object                       # FleetEvalMetrics at the optimum
+    objective: Objective
+    method: str
+    history: List[float]
+    evaluations: int
+    independent: List[OptimizeResult] = dataclasses.field(
+        default_factory=list)
+
+
+def optimize_fleet(cases: Sequence, site=None, *,
+                   objective: Union[str, Mapping, Objective] = "co2",
+                   constraints: Optional[Mapping] = None,
+                   method: str = "auto",
+                   n_slots: Optional[int] = None,
+                   u_min: float = 0.05, u_max: float = 1.0,
+                   batch_size: int = 50,
+                   price=None,
+                   horizon_h: Optional[float] = None,
+                   candidates: int = 192, iterations: int = 30,
+                   elite_frac: float = 0.125, init_std: float = 1.0,
+                   smoothing: float = 0.7,
+                   steps: int = 500, lr: float = 0.1,
+                   init: Union[str, float, Sequence] = "independent",
+                   seed: int = 0,
+                   backend: Optional[str] = None) -> FleetOptimizeResult:
+    """Search the joint `ParametricSchedule` space for a whole fleet.
+
+    `cases` are the M member `SweepCase`s (shared start_hour/bands, one
+    carbon signal; per-campaign `deadline_h` become runtime caps) and
+    `site` a `repro.core.fleet.Site` whose cap/office draw couple them
+    (None = uncoupled).  The parameter vector is M x n_slots logits —
+    campaign m's day schedule in row m — optimized through
+    `FleetTraceObjective` with the same Adam-through-the-scan and
+    vmapped-CEM machinery as `optimize_schedule` (the searches share
+    one generic loss interface).
+
+    A *physical* site cap is enforced by the curtailment inside the
+    objective (no separate constraint needed — idle and office draw are
+    not sheddable, so a soft `site_peak_kw` cap below the physical one
+    would only distort the objective).  To instead *plan* under a peak
+    budget — schedule around the peak rather than rely on reactive
+    throttling — pass an uncapped site and an explicit
+    `constraints={"site_peak_kw": budget}`.
+
+    `init="independent"` (default) warm-starts from each campaign's own
+    `optimize_schedule` optimum (same budgets, no coupling): since both
+    searches keep the best candidate seen — including the start — the
+    joint result is never worse than the independent optima evaluated
+    under the shared cap.  `init` also accepts a flat intensity or an
+    (M, n_slots) intensity table.
+    """
+    if not len(cases):
+        raise ValueError("optimize_fleet needs at least one case")
+    M = len(cases)
+    obj = Objective.coerce(objective, constraints)
+    site_cap = getattr(site, "power_cap_kw", None)
+    office_kw = float(getattr(site, "office_kw", 0.0) or 0.0)
+    deadlines = np.array([float(getattr(c, "deadline_h", 0.0) or 0.0)
+                          for c in cases])
+
+    sph = 1
+    for c in cases:
+        sph = math.lcm(sph, case_slots_per_hour(c))
+    if n_slots is not None:
+        if n_slots % 24:
+            raise ValueError(f"n_slots must be a multiple of 24, "
+                             f"got {n_slots}")
+        sph = math.lcm(sph, n_slots // 24)
+    n = 24 * sph
+
+    needs_price = any(k == "cost_usd" for k in
+                      list(obj.weights) + list(obj.constraints))
+    if needs_price and price is None:
+        raise ValueError("objective involves cost_usd but no price signal "
+                         "was given")
+
+    if horizon_h is None and deadlines.max(initial=0.0) > 0.0:
+        horizon_h = float(deadlines.max()) * 1.25 + 24.0
+    from repro.core.engine_jax import FleetTraceObjective
+    fo = FleetTraceObjective(cases, site_cap_kw=site_cap,
+                             office_kw=office_kw, price=price,
+                             slots_per_hour=sph, horizon_h=horizon_h,
+                             batch_size=float(batch_size), backend=backend)
+
+    # ---- seed the joint search -------------------------------------------
+    independent: List[OptimizeResult] = []
+    if isinstance(init, str):
+        if init != "independent":
+            raise ValueError(f"unknown init {init!r}; use 'independent', a "
+                             "flat intensity, or an (M, n_slots) table")
+        # the single-campaign objective knows no site_peak_kw: strip it
+        # from constraints AND weights (a peak-only objective falls back
+        # to CO2 for the warm start — the joint search still optimizes
+        # the real objective afterwards)
+        sub_weights = {k: v for k, v in obj.weights.items()
+                       if k != "site_peak_kw"}
+        sub_obj = dataclasses.replace(
+            obj, weights=sub_weights or {"co2_kg": 1.0},
+            constraints={k: v for k, v in obj.constraints.items()
+                         if k != "site_peak_kw"})
+        for m, c in enumerate(cases):
+            independent.append(optimize_schedule(
+                c, sub_obj,
+                {"runtime_h": deadlines[m]} if deadlines[m] else None,
+                method=method, n_slots=n, u_min=u_min, u_max=u_max,
+                batch_size=batch_size, price=price,
+                candidates=candidates, iterations=iterations,
+                elite_frac=elite_frac, init_std=init_std,
+                smoothing=smoothing, steps=steps, lr=lr, seed=seed + m,
+                backend=backend))
+        init_u = np.stack([r.schedule.intensity_table()
+                           for r in independent])
+    elif np.ndim(init) == 0:
+        init_u = np.full((M, n), float(init))
+    else:
+        init_u = np.asarray(init, dtype=float)
+        if init_u.shape[0] != M or n % init_u.shape[1]:
+            raise ValueError(f"init table of shape {init_u.shape} does not "
+                             f"tile the ({M}, {n}) joint grid")
+        init_u = np.repeat(init_u, n // init_u.shape[1], axis=1)
+
+    seed_scheds = [ParametricSchedule.from_intensities(
+        init_u[m], u_min=u_min, u_max=u_max, batch_size=batch_size)
+        for m in range(M)]
+    p0 = np.concatenate([np.asarray(s.logits, dtype=float)
+                         for s in seed_scheds])
+
+    # normalization: one reference evaluation of the seed makes weights
+    # and penalties workload-independent, like the single-campaign path
+    ref = fo.evaluate_batch(init_u[None])
+    scales = {k: max(abs(float(np.asarray(getattr(ref, k)).sum())), 1e-9)
+              for k in METRIC_KEYS}
+    scales["site_peak_kw"] = max(float(np.asarray(ref.site_peak_kw)
+                                       .ravel()[0]), 1e-9)
+
+    if method == "auto":
+        method = "cem+grad" if fo.use_jax else "cem"
+    if method in ("grad", "cem+grad") and not fo.use_jax:
+        raise RuntimeError(f"method={method!r} needs the JAX backend "
+                           "(jax is not importable or backend='numpy')")
+    if method not in ("grad", "cem", "cem+grad"):
+        raise ValueError(f"unknown method {method!r}; use 'grad', 'cem', "
+                         "'cem+grad' or 'auto'")
+
+    n_evals = 0
+    history: List[float] = []
+    if "cem" in method:
+        def eval_pop(pop):
+            u = ParametricSchedule.u_from_logits(
+                pop.reshape(-1, M, n), u_min, u_max, xp=np)
+            fm = fo.evaluate_batch(u)
+            return np.asarray(scalarize_fleet(fm, obj, scales, deadlines,
+                                              xp=np))
+
+        best_p, history, n_evals = _cem_search(
+            eval_pop, p0, candidates, iterations, elite_frac, init_std,
+            smoothing, seed)
+        p0 = best_p
+    if "grad" in method:
+        import jax.numpy as jnp
+
+        def grad_loss(p):
+            u = ParametricSchedule.u_from_logits(p.reshape(M, n), u_min,
+                                                 u_max, xp=jnp)
+            return scalarize_fleet(fo.evaluate(u), obj, scales, deadlines,
+                                   xp=jnp)
+
+        best_p, ghist, gevals = _grad_search(grad_loss, p0, steps, lr)
+        start = history[-1] if history else math.inf
+        history += [min(v, start) for v in ghist]
+        n_evals += gevals
+
+    label = f"optimized_fleet[{obj.label()}]"
+    best_logits = np.asarray(best_p, dtype=float).reshape(M, n)
+    schedules = [
+        seed_scheds[m].with_logits(
+            best_logits[m],
+            name=f"{label}/{getattr(cases[m].workload, 'name', m)}")
+        for m in range(M)]
+
+    # report through the real grouped-lane engine so the rows are
+    # directly comparable to any fleet sweep
+    from repro.core.fleet import Site, fleet_sweep
+    eng_site = site if site is not None else Site(
+        power_cap_kw=site_cap, office_kw=office_kw, bands=cases[0].bands,
+        carbon=cases[0].carbon, price=price)
+    final_cases = [dataclasses.replace(c, schedule=s, label=s.name)
+                   for c, s in zip(cases, schedules)]
+    fr = fleet_sweep([final_cases], eng_site, price=price, names=[label])[0]
+
+    u_best = np.stack([s.intensity_table() for s in schedules])
+    raw = fo.evaluate_batch(u_best[None])
+    best_metrics = type(raw)(*(np.asarray(f)[0] for f in raw))
+    value = float(np.asarray(scalarize_fleet(raw, obj, scales, deadlines,
+                                             xp=np))[0])
+    return FleetOptimizeResult(
+        schedules=schedules, results=fr.campaigns, site=fr.site,
+        value=value, metrics=best_metrics, objective=obj, method=method,
+        history=history, evaluations=n_evals, independent=independent)
+
+
+__all__ = ["METRIC_KEYS", "ROBUST_MODES", "FleetOptimizeResult", "Objective",
+           "OptimizeResult", "canonical_metric", "optimize_fleet",
+           "optimize_schedule", "pareto_front", "reduce_ensemble",
+           "scalarize", "scalarize_fleet"]

@@ -31,7 +31,21 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class SchedulingContext:
-    """Everything a schedule may consult for one decision."""
+    """Everything a schedule may consult for one decision.
+
+    The site-level fields describe the shared power envelope a fleet of
+    concurrent campaigns runs under (core/fleet.py): `site_power_kw` is
+    the total site draw (office + all campaigns) over the slot *entering*
+    this decision, `site_headroom` the fraction of the site cap still
+    free at that draw (1.0 when the site has no cap), and `n_active` the
+    number of fleet campaigns with work remaining.  Standalone campaigns
+    keep the defaults — a schedule written against them behaves
+    identically with and without a fleet.  The site fields are exact in
+    the sequential fleet oracle; the vectorized engines lower decisions
+    to tables and do not feed live site state back into `decide()` (the
+    cap coupling itself is physics, applied by the engine after
+    decisions — see `model.site_throttle`).
+    """
     hour_of_day: float           # local time, [0, 24)
     band: str                    # time band at this hour
     background: float            # background (office) load, [0, 1]
@@ -40,6 +54,9 @@ class SchedulingContext:
     elapsed_h: float = 0.0       # hours since campaign start
     progress: float = 0.0        # fraction of the workload completed, [0, 1]
     deadline_h: float = 0.0      # campaign deadline in hours (0 = none)
+    site_power_kw: float = 0.0   # site draw entering this slot (0 = unknown)
+    site_headroom: float = 1.0   # free fraction of the site cap, [0, 1]
+    n_active: int = 1            # fleet campaigns still running
 
 
 @dataclasses.dataclass(frozen=True)
@@ -326,6 +343,145 @@ def parametric_schedule(n_slots: int = 24, *, init: float = 0.6,
         batch_size=batch_size, name=name)
 
 
+# ---------------------------------------------------------------------------
+# Joint (fleet-level) scheduling
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CarbonGateSchedule:
+    """Demand `u_high` while grid carbon is at or below `threshold`
+    (kg CO2e/kWh), `u_low` above it — the per-member demand rule behind
+    `carbon_gated_cap`: gating every member's demand on one shared
+    carbon signal caps the whole fleet's draw in dirty hours.  Consults
+    `ctx.carbon_factor`, so the trace compiler's probe classifies it
+    carbon-dependent (per-member decision tables under an ensemble)."""
+    threshold: float
+    u_low: float = 0.15
+    u_high: float = 0.95
+    batch_size: int = 50
+    name: str = "carbon_gate"
+
+    def decide(self, ctx: SchedulingContext) -> Decision:
+        u = self.u_high if ctx.carbon_factor <= self.threshold else self.u_low
+        return Decision(float(u), self.batch_size)
+
+    def decide_grid(self, ctx: SchedulingContext):
+        u = np.where(np.asarray(ctx.carbon_factor) <= self.threshold,
+                     self.u_high, self.u_low)
+        u = np.broadcast_to(u, np.broadcast_shapes(np.shape(u),
+                                                   np.shape(ctx.progress)))
+        return u, np.broadcast_to(float(self.batch_size), np.shape(u))
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationSchedule:
+    """A joint schedule: per-campaign intensities for a whole fleet.
+
+    One `AllocationSchedule` covers M concurrent campaigns under a
+    shared site (core/fleet.py).  It is two coupled halves:
+
+      * **demand** — `members[m]` is campaign m's demand schedule (any
+        ordinary `Schedule`; a single member broadcasts to every
+        campaign).  `decide_joint(ctxs)` returns the demanded
+        per-campaign decisions;
+      * **allocation** — the realized intensities follow from the site's
+        shared curtailment, `model.site_throttle`: when the demanded
+        fleet draw exceeds the site headroom, every campaign is scaled
+        by the same demand-proportional factor.  This is physics, not
+        schedule code — the sequential fleet oracle and the grouped-lane
+        engine both apply it after decisions, so a demand schedule runs
+        identically under both.
+
+    The bundled reference allocations compose existing demand families:
+    `proportional_split` (flat equal demand — the cap splits headroom
+    proportionally), `deadline_weighted_split` (per-member
+    `DeadlineSchedule` pace-keepers — campaigns behind their deadline
+    demand more and therefore win a larger share of a contended cap),
+    and `carbon_gated_cap` (per-member `CarbonGateSchedule`s — the whole
+    fleet's draw is gated on grid carbon).  `decide(ctx)` delegates to
+    member 0 so an AllocationSchedule still satisfies the `Schedule`
+    protocol (an M=1 fleet degenerates to a plain campaign).
+    """
+    members: Tuple[Schedule, ...]
+    name: str = "allocation"
+
+    def __post_init__(self):
+        if len(self.members) < 1:
+            raise ValueError("AllocationSchedule needs at least one member "
+                             "demand schedule")
+
+    def n_members(self) -> int:
+        return len(self.members)
+
+    def member_schedule(self, m: int) -> Schedule:
+        """Campaign m's demand schedule (a single member broadcasts)."""
+        if len(self.members) == 1:
+            return self.members[0]
+        return self.members[m]
+
+    def for_fleet(self, n: int) -> Tuple[Schedule, ...]:
+        """The M per-campaign demand schedules for an M-campaign fleet."""
+        if len(self.members) not in (1, n):
+            raise ValueError(
+                f"AllocationSchedule {self.name!r} has {len(self.members)} "
+                f"member schedules but the fleet has {n} campaigns; give "
+                "one (broadcast) or exactly one per campaign")
+        return tuple(self.member_schedule(m) for m in range(n))
+
+    def decide(self, ctx: SchedulingContext) -> Decision:
+        return self.members[0].decide(ctx)
+
+    def decide_joint(self, ctxs) -> Tuple[Decision, ...]:
+        """Demanded decisions for every campaign, one context each
+        (contexts carry the site fields plus per-campaign progress/
+        deadline).  Realized intensities are these demands scaled by the
+        site curtailment factor — see `model.site_throttle`."""
+        return tuple(self.member_schedule(m).decide(ctx)
+                     for m, ctx in enumerate(ctxs))
+
+    def change_hours(self, bands) -> Tuple[float, ...]:
+        hs = set()
+        for s in self.members:
+            hs.update(change_hours(s, bands))
+        return tuple(sorted(hs))
+
+
+def proportional_split(u: float = 0.9, *, batch_size: int = 50,
+                       name: str = "") -> AllocationSchedule:
+    """Every campaign demands the same flat intensity; under a site cap
+    the shared curtailment splits the headroom proportionally (equal
+    demand -> equal share)."""
+    from repro.core.policy import constant_schedule
+    return AllocationSchedule((constant_schedule(u, batch_size=batch_size),),
+                              name=name or f"proportional_{u:g}")
+
+
+def deadline_weighted_split(deadlines_h, *, u_low: float = 0.35,
+                            u_high: float = 0.95, band: float = 0.1,
+                            batch_size: int = 50,
+                            name: str = "") -> AllocationSchedule:
+    """Per-campaign `DeadlineSchedule` pace-keepers: a campaign behind
+    its own deadline pace demands more, so a contended cap is split in
+    favour of the urgent campaigns (demand-proportional curtailment
+    turns demand weights into allocation weights)."""
+    members = tuple(deadline_schedule(float(d), u_low=u_low, u_high=u_high,
+                                      band=band, batch_size=batch_size)
+                    for d in deadlines_h)
+    return AllocationSchedule(members, name=name or "deadline_weighted")
+
+
+def carbon_gated_cap(threshold: float, *, u_low: float = 0.15,
+                     u_high: float = 0.95, batch_size: int = 50,
+                     name: str = "") -> AllocationSchedule:
+    """Gate the whole fleet's demand on grid carbon: every campaign
+    demands `u_high` in clean hours (carbon <= threshold) and `u_low`
+    in dirty ones, capping the site's draw exactly when it is most
+    carbon-expensive."""
+    member = CarbonGateSchedule(float(threshold), u_low=u_low, u_high=u_high,
+                                batch_size=batch_size)
+    return AllocationSchedule((member,),
+                              name=name or f"carbon_gate_{threshold:g}")
+
+
 class _LegacyPolicyAdapter:
     """Back-compat shim for pre-Schedule duck-typed policy objects.
 
@@ -352,6 +508,22 @@ class _LegacyPolicyAdapter:
         if hasattr(p, "intensity_at_hour") and getattr(p, "hourly_intensity", ()):
             return HOURLY_GRID
         return bands.edges()
+
+
+def dedupe_names(names) -> list:
+    """Disambiguate duplicate labels with an indexed suffix (`name#1`,
+    `name#2`, ...), so sweep result rows and dashboard tables keyed by
+    name never silently collide."""
+    seen: dict = {}
+    out = []
+    for n in names:
+        if n in seen:
+            seen[n] += 1
+            out.append(f"{n}#{seen[n]}")
+        else:
+            seen[n] = 0
+            out.append(n)
+    return out
 
 
 def as_schedule(obj) -> Schedule:

@@ -32,7 +32,7 @@ from repro.core.dashboard import render_frontier_dashboard, render_run_dashboard
 from repro.core.energy import ChipProfile, MachineProfile, StepCost
 from repro.core.engine import SweepCase, frontier_from_sweep, sweep
 from repro.core.policy import BASELINE, POLICIES, TimeBands
-from repro.core.schedule import Schedule, as_schedule
+from repro.core.schedule import Schedule, as_schedule, dedupe_names
 from repro.core.signal import (Signal, SignalSet, as_ensemble, as_trace,
                                default_signals)
 from repro.core.simulator import (SimResult, calibrate_workload, fill_deltas,
@@ -158,10 +158,16 @@ class Campaign:
         With the default schedule set this reproduces `policy_frontier`
         float-for-float (same sequential code path, same calibration).
         """
+        schedules = (list(schedules) if schedules is not None
+                     else list(POLICIES.values()))
+        if not schedules:
+            raise ValueError("Campaign.frontier needs at least one schedule "
+                             "(got an empty sequence); omit the argument "
+                             "for the bundled policy set")
         wl, m = self.calibrated()
         base = self.baseline()
         out = []
-        for s in (schedules if schedules is not None else POLICIES.values()):
+        for s in schedules:
             s = as_schedule(s)
             # reuse the cached baseline only for the bundled BASELINE object;
             # a user schedule merely *named* "baseline" is still simulated
@@ -170,6 +176,12 @@ class Campaign:
                                               self.carbon, self.start_hour,
                                               price=self.price))
         fill_deltas(out, base)
+        # duplicate schedule names would collide in dashboards and any
+        # name-keyed view of the table; renamed rows are copies so the
+        # cached baseline object keeps its canonical name
+        names = dedupe_names([r.policy for r in out])
+        out = [r if r.policy == n else dataclasses.replace(r, policy=n)
+               for r, n in zip(out, names)]
         if render and self.out_dir:
             render_frontier_dashboard(out, self.out_dir, title=self.name)
         return out
@@ -213,15 +225,23 @@ class Campaign:
             carbons = [as_trace(carbon_trace, name="carbon-trace")]
         elif carbon_ensemble is not None:
             carbons = [as_ensemble(carbon_ensemble, name="carbon-ensemble")]
+        schedules = [as_schedule(s) for s in schedules]
+        if not schedules:
+            raise ValueError("Campaign.sweep needs at least one schedule "
+                             "(got an empty sequence)")
+        # duplicate names collide in dashboards and name-keyed result
+        # views; disambiguated labels keep every row addressable
+        labels = dedupe_names([s.name for s in schedules])
         wl0, m = self.calibrated()
         cases = []
         for wl in (workloads if workloads is not None else [wl0]):
             if wl is not wl0 and not wl.rate_at_full:
                 wl = dataclasses.replace(wl, rate_at_full=wl0.rate_at_full)
             for carbon in (carbons if carbons is not None else [self.carbon]):
-                for s in schedules:
-                    cases.append(SweepCase(as_schedule(s), wl, m, self.bands,
+                for s, lbl in zip(schedules, labels):
+                    cases.append(SweepCase(s, wl, m, self.bands,
                                            carbon, self.start_hour,
+                                           label=lbl,
                                            deadline_h=deadline_h))
         results = sweep(cases, price=self.price)
         return (frontier_from_sweep(results, base=self.baseline())
@@ -308,6 +328,15 @@ class Campaign:
         if deltas:
             fill_deltas([out.result] + out.frontier, self.baseline())
         return out
+
+    # ------------------------------------------------------------------
+    def as_fleet(self, site=None, **kwargs):
+        """This campaign as an M=1 `Fleet` (the degenerate special case:
+        `c.as_fleet().sweep(scheds)` reproduces `c.sweep(scheds)` row
+        for row).  `site` is a `repro.core.fleet.Site`; by default the
+        fleet inherits this campaign's bands/carbon/price with no cap."""
+        from repro.core.fleet import Fleet
+        return Fleet([self], site, **kwargs)
 
     # ------------------------------------------------------------------
     # Training campaigns
