@@ -43,6 +43,8 @@ from repro.core import (  # noqa: F401
     # execution + tracking
     CarinaController, IntensityDecision, SimClock, RunTracker, RunSummary,
     UnitRecord, load_units, merge_summaries, summary_from_units,
+    # arrival streams (serving data side; the scheduler itself is lazy)
+    ArrivalBatch, DEFAULT_TIERS, LOAD_SHAPES, QualityTier, arrival_stream,
     # workloads + back-compat free functions
     OEMWorkload, OEM_CASE_1, OEM_CASE_2, TrainingCampaign, SimResult,
     calibrate_workload, policy_frontier, simulate_campaign,
@@ -58,7 +60,13 @@ _LAZY = ("trace_sweep", "TraceObjective", "EvalMetrics", "evaluate_params",
          "ScanStats", "scan_stats", "reset_scan_stats",
          "Objective", "OptimizeResult", "FleetOptimizeResult",
          "optimize_schedule", "optimize_fleet", "pareto_front",
-         "reduce_ensemble", "ROBUST_MODES", "scalarize_fleet")
+         "reduce_ensemble", "ROBUST_MODES", "scalarize_fleet",
+         # online serving (executes through the trace engine -> lazy)
+         "Assignment", "DEFAULT_FILL_FRAC", "FifoServingPolicy",
+         "GreedyServingPolicy", "OptimizedServingPolicy",
+         "SERVING_POLICIES", "ServingRollup", "ServingSession",
+         "ServingWindow", "WindowReport", "as_serving_policy",
+         "execute_assignment", "serve_window")
 
 
 def __getattr__(name):

@@ -5,6 +5,8 @@ New code should reach for the session API (`repro.carina.Campaign`, the
 free functions `simulate_campaign` / `policy_frontier` and direct
 `Policy` subclassing remain as back-compat shims.
 """
+from repro.core.arrivals import (ArrivalBatch, DEFAULT_TIERS, LOAD_SHAPES,  # noqa: F401
+                                 QualityTier, arrival_stream)
 from repro.core.carbon import DTE_FACTOR, GridCarbonModel, MIDWEST_HOURLY  # noqa: F401
 from repro.core.controller import CarinaController, IntensityDecision, SimClock  # noqa: F401
 from repro.core.dashboard import render_frontier_dashboard, render_run_dashboard  # noqa: F401
@@ -75,6 +77,22 @@ _LAZY = {
     "reduce_ensemble": "repro.core.optimize",
     "ROBUST_MODES": "repro.core.optimize",
     "scalarize_fleet": "repro.core.optimize",
+    # serving layer: core/serve.py executes through engine_jax, so it
+    # rides the same lazy door (core/arrivals.py above is numpy-only
+    # and re-exports eagerly)
+    "Assignment": "repro.core.serve",
+    "DEFAULT_FILL_FRAC": "repro.core.serve",
+    "FifoServingPolicy": "repro.core.serve",
+    "GreedyServingPolicy": "repro.core.serve",
+    "OptimizedServingPolicy": "repro.core.serve",
+    "SERVING_POLICIES": "repro.core.serve",
+    "ServingRollup": "repro.core.serve",
+    "ServingSession": "repro.core.serve",
+    "ServingWindow": "repro.core.serve",
+    "WindowReport": "repro.core.serve",
+    "as_serving_policy": "repro.core.serve",
+    "execute_assignment": "repro.core.serve",
+    "serve_window": "repro.core.serve",
 }
 
 

@@ -116,15 +116,22 @@ class ScanStats:
     `plan_hits`/`plan_misses` count the per-case compile cache;
     `jit_shapes` holds the distinct shape signatures handed to the
     jitted kernels (each costs one XLA compile, summarized by
-    `jit_compiles`).  Counters accumulate per process — pass
-    `scan_stats(reset=True)` (or call `reset_scan_stats()`) to zero
-    them between measurements.
+    `jit_compiles`).  The `requests_*` counters are fed by the serving
+    layer (core/serve.py) as it schedules arrival windows: seen is
+    every request offered, admitted/rejected partition them, and
+    degraded counts admissions that only fit at a cheaper quality tier.
+    Counters accumulate per process — pass `scan_stats(reset=True)`
+    (or call `reset_scan_stats()`) to zero them between measurements.
     """
     slot_work: int = 0            # scan-lane x slot units executed
     chunks: int = 0               # kernel launches
     grouped_lanes: int = 0        # lane x chunk units in coupled groups
     plan_hits: int = 0            # per-case compile cache hits
     plan_misses: int = 0
+    requests_seen: int = 0        # requests offered to the serving layer
+    requests_admitted: int = 0    # ... assigned a service slot
+    requests_rejected: int = 0    # ... infeasible at every allowed tier
+    requests_degraded: int = 0    # ... admitted at a cheaper tier
     jit_shapes: Set[tuple] = dataclasses.field(default_factory=set)
 
     @property
@@ -160,6 +167,10 @@ def reset_scan_stats() -> None:
     _STATS.grouped_lanes = 0
     _STATS.plan_hits = 0
     _STATS.plan_misses = 0
+    _STATS.requests_seen = 0
+    _STATS.requests_admitted = 0
+    _STATS.requests_rejected = 0
+    _STATS.requests_degraded = 0
     _STATS.jit_shapes = set()
 
 

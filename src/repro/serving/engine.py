@@ -8,8 +8,10 @@ Design (vLLM-lite, TPU-idiomatic: fixed shapes, no paging):
   * every engine tick decodes ALL active slots in one batched decode_step
     (per-slot position indices — the vector-index decode path);
   * finished slots are freed and refilled from the queue;
-  * each request is a CARINA tracked unit: runtime + estimated energy
-    (roofline mode when a StepCost is available) + carbon.
+  * each engine tick is a CARINA tracked unit: runtime + estimated energy
+    (roofline mode when a StepCost is available) + carbon, accounted by a
+    `ServingSession` (core/serve.py) in live mode — the session's carbon
+    gate also throttles admissions, with queue-pressure override.
 
 Supported families: attention (full), MLA, mamba, rglru-hybrid — i.e. every
 assigned decoder arch; window-attention ring caches are filled from the
@@ -26,7 +28,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, LOCAL_ATTN
-from repro.core.controller import CarinaController
 from repro.models.model import Model
 from repro.models import transformer as T
 
@@ -85,14 +86,15 @@ def _write_slot(cache, prefill_cache, slot: int, cfg: ModelConfig,
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, slots: int = 4,
-                 s_max: int = 256, controller: Optional[CarinaController] = None,
-                 eos_id: int = -1):
+                 s_max: int = 256, session=None, eos_id: int = -1):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.slots = slots
         self.s_max = s_max
-        self.controller = controller
+        # a core.serve.ServingSession in live mode: carbon-gated
+        # admission + per-tick energy/CO2 accounting
+        self.session = session
         self.eos_id = eos_id
         self.cache = model.cache_zeros(slots, s_max)
         self.lengths = np.zeros((slots,), np.int32)      # current position
@@ -115,6 +117,9 @@ class ServingEngine:
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
+            if (self.session is not None
+                    and not self.session.gate_open(len(self.queue))):
+                break                      # dirty hour: let the queue wait
             r = self.queue.pop(0)
             batch = {"tokens": jnp.asarray(r.prompt[None, :])}
             logits, pc = self._prefill(self.params, batch)
@@ -153,11 +158,9 @@ class ServingEngine:
                 self.completed.append(r)
                 self.active[s] = None
                 self.lengths[s] = 0
-        if self.controller is not None:
-            d = self.controller.decide()
-            self.controller.record_unit(
-                d, steps=1, runtime_s=time.monotonic() - t0,
-                meta={"active": len(act)})
+        if self.session is not None:
+            self.session.record_tick(time.monotonic() - t0,
+                                     active=len(act), steps=1)
         return len(act)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:

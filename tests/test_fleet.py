@@ -405,3 +405,58 @@ def test_allocation_schedule_contract():
     b = proportional_split(0.8)
     assert [s.name for s in b.for_fleet(3)].count("const_0.80") == 3
     assert b.decide(ctx).intensity == 0.8
+
+
+def test_allocation_schedule_degenerate_contexts():
+    """Edge contexts never yield NaN or out-of-range demands: zero
+    active campaigns mid-horizon, a fully spent cap (site_headroom=0),
+    and an office draw already past the cap (negative headroom)."""
+    from repro.core.schedule import SchedulingContext
+    allocs = (proportional_split(0.8),
+              deadline_weighted_split([100.0, 200.0]),
+              carbon_gated_cap(0.4))
+    ctxs = (
+        SchedulingContext(12.0, "shoulder", 0.5, 0.6, n_active=0,
+                          site_power_kw=0.0),
+        SchedulingContext(12.0, "shoulder", 0.5, 0.6, elapsed_h=10.0,
+                          progress=0.5, site_power_kw=5.0,
+                          site_headroom=0.0, n_active=2),
+        SchedulingContext(12.0, "shoulder", 0.5, 0.6, site_power_kw=9.0,
+                          site_headroom=-0.25, n_active=2),
+    )
+    for a in allocs:
+        for ctx in ctxs:
+            for d in a.decide_joint([ctx] * a.n_members()):
+                assert math.isfinite(d.intensity)
+                assert 0.0 <= d.intensity <= 1.0
+
+
+def test_site_throttle_all_members_finished():
+    """With every campaign finished the fleet draw collapses to the
+    non-sheddable base: the RATE_EPS guard keeps the step at f=1 (no
+    0/0), and a headroom below even the base pins the floor instead of
+    dividing by zero — for negative headroom too (office past cap)."""
+    assert site_throttle(2.0, 2.0, 3.0) == 1.0
+    assert site_throttle(0.0, 0.0, 3.0) == 1.0
+    assert site_throttle(2.0, 2.0, 1.0) == 0.05
+    assert site_throttle(4.0, 1.0, -0.5) == 0.05
+    out = site_throttle(np.array([0.0, 2.0]), np.array([0.0, 2.0]), 3.0,
+                        xp=np)
+    assert np.allclose(out, 1.0)
+
+
+def test_fleet_all_campaigns_finish_mid_horizon(calibrated):
+    """Shrink both workloads so the whole fleet completes well inside
+    the horizon under an active cap: results stay finite, runtimes are
+    real, and the site peak still honours the cap after the fleet goes
+    idle (office-only draw)."""
+    wl1, wl2, m = calibrated
+    tiny = (dataclasses.replace(wl1, n_scenarios=wl1.n_scenarios // 60),
+            dataclasses.replace(wl2, n_scenarios=wl2.n_scenarios // 60))
+    cases = _fleet_cases((tiny[0], tiny[1], m), (BASELINE, BASELINE))
+    res = fleet_sweep([cases], SITE)[0]
+    for c in res.campaigns:
+        assert math.isfinite(c.runtime_h) and 0.0 < c.runtime_h < 24.0
+        assert math.isfinite(c.co2_kg) and c.co2_kg > 0
+    assert res.site.peak_kw <= SITE.power_cap_kw * 1.05
+    assert res.site.peak_kw >= SITE.office_kw

@@ -1,0 +1,280 @@
+"""Serving layer: arrival streams + the request-level scheduler.
+
+* determinism: `arrival_stream` is pure in its seed; scheduling is pure
+  NumPy, so two runs pin identical schedules, and the NumPy fallback vs
+  the jit execution path agree on every slot/tier and on CO2;
+* the vectorized FIFO matches the per-request Python-loop oracle;
+* the headline claim, pinned on a fixed seed + the Midwest trace: the
+  greedy and CEM-optimized policies beat carbon-blind FIFO on total CO2
+  at equal (zero) SLO-miss rate with every request admitted;
+* scale: a 1-day stream of 1M requests schedules and executes in one
+  compiled sweep (one chunk launch, one jit shape);
+* `ServingSession` lifecycle (submit/tick/drain/rollup), the serving
+  counters in `scan_stats`, degrade/reject behaviour under overload,
+  and the live-mode gate + per-tick accounting.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ArrivalBatch, DEFAULT_TIERS, DTE_FACTOR,
+                        HourlySignal, LOAD_SHAPES, MIDWEST_HOURLY,
+                        QualityTier, RunTracker, ServingSession, SimClock,
+                        StepCost, arrival_stream, serve_window)
+from repro.core.engine_jax import reset_scan_stats, scan_stats
+from repro.core.serve import (FifoServingPolicy, GreedyServingPolicy,
+                              OptimizedServingPolicy, _fifo_assign_loop,
+                              as_serving_policy)
+
+MIDWEST = HourlySignal(tuple(float(v) * DTE_FACTOR for v in MIDWEST_HOURLY))
+
+
+def _session(**kw):
+    kw.setdefault("carbon", MIDWEST)
+    kw.setdefault("service_rate", 0.6)
+    kw.setdefault("start_hour", 6.0)
+    return ServingSession(**kw)
+
+
+# ---------------------------------------------------------------------------
+# arrival streams
+# ---------------------------------------------------------------------------
+def test_arrival_stream_deterministic_in_seed():
+    for shape in LOAD_SHAPES:
+        a = arrival_stream(500, shape=shape, seed=7, tier_mix=(0.7, 0.3))
+        b = arrival_stream(500, shape=shape, seed=7, tier_mix=(0.7, 0.3))
+        for f in ("t_arrive_h", "deadline_h", "work", "tier"):
+            assert np.array_equal(getattr(a, f), getattr(b, f)), (shape, f)
+    c = arrival_stream(500, shape="random", seed=8)
+    assert not np.array_equal(a.t_arrive_h, c.t_arrive_h)
+
+
+@pytest.mark.parametrize("shape", LOAD_SHAPES)
+def test_arrival_stream_well_formed(shape):
+    b = arrival_stream(2000, horizon_h=12.0, shape=shape, seed=1,
+                       slack_h=(0.5, 3.0), tier_mix=(0.6, 0.3, 0.1))
+    assert b.n == 2000 and b.horizon_h == 12.0
+    assert np.all(np.diff(b.t_arrive_h) >= 0)
+    assert b.t_arrive_h[0] >= 0 and b.t_arrive_h[-1] <= 12.0
+    assert np.all(b.deadline_h >= b.t_arrive_h + 0.5 - 1e-9)
+    assert np.all(b.deadline_h <= b.t_arrive_h + 3.0 + 1e-9)
+    assert np.all(b.work > 0)
+    assert set(np.unique(b.tier)) <= {0, 1, 2}
+
+
+def test_arrival_stream_shapes_differ():
+    n, h = 4000, 24.0
+    t = {s: arrival_stream(n, h, shape=s, seed=0).t_arrive_h
+         for s in LOAD_SHAPES}
+    # linear ramps up: mass sits later than the uniform stream
+    assert t["linear"].mean() > t["random"].mean() + 1.0
+    # peak concentrates around peak_frac * horizon (default 0.75)
+    in_peak = np.mean((t["peak"] > 0.6 * h) & (t["peak"] < 0.9 * h))
+    assert in_peak > 0.5 > np.mean((t["random"] > 0.6 * h)
+                                   & (t["random"] < 0.9 * h))
+    # camel is bimodal: a trough between the default humps (0.35, 0.8)
+    trough = np.mean((t["camel"] > 0.5 * h) & (t["camel"] < 0.65 * h))
+    hump = np.mean((t["camel"] > 0.275 * h) & (t["camel"] < 0.425 * h))
+    assert hump > 2 * trough
+
+
+def test_arrival_batch_validation_and_merge():
+    ok = dict(t_arrive_h=np.array([0.0, 1.0]),
+              deadline_h=np.array([2.0, 3.0]),
+              work=np.array([1.0, 1.0]), tier=np.array([0, 0]))
+    ArrivalBatch(**ok)
+    with pytest.raises(ValueError, match="sorted"):
+        ArrivalBatch(**{**ok, "t_arrive_h": np.array([1.0, 0.0])})
+    with pytest.raises(ValueError, match="deadline"):
+        ArrivalBatch(**{**ok, "deadline_h": np.array([2.0, 0.5])})
+    with pytest.raises(ValueError, match="positive"):
+        ArrivalBatch(**{**ok, "work": np.array([0.0, 1.0])})
+    a = arrival_stream(50, shape="peak", seed=1)
+    b = arrival_stream(70, shape="random", seed=2)
+    m = ArrivalBatch.merge([a, b])
+    assert m.n == 120
+    assert np.all(np.diff(m.t_arrive_h) >= 0)
+    assert m.work.sum() == pytest.approx(a.work.sum() + b.work.sum())
+    with pytest.raises(ValueError, match="unknown load shape"):
+        arrival_stream(10, shape="tsunami")
+    with pytest.raises(ValueError, match="work_scale"):
+        QualityTier("bad", 1.5)
+
+
+# ---------------------------------------------------------------------------
+# FIFO: vectorized == per-request loop oracle
+# ---------------------------------------------------------------------------
+def test_fifo_matches_python_loop_oracle():
+    sess = _session(service_rate=0.05)        # tight: forces rejections
+    w = sess.window()
+    for shape, seed in (("random", 0), ("peak", 1), ("camel", 2)):
+        batch = arrival_stream(5000, shape=shape, seed=seed,
+                               tier_mix=(0.8, 0.2))
+        asn = FifoServingPolicy().assign(batch, w, DEFAULT_TIERS)
+        ref = _fifo_assign_loop(batch, w, DEFAULT_TIERS)
+        assert np.array_equal(asn.slot, ref.slot), shape
+        assert asn.demand.sum() == pytest.approx(ref.demand.sum())
+        assert asn.n_admitted < batch.n       # the overload actually bites
+
+
+# ---------------------------------------------------------------------------
+# the headline: carbon-aware beats FIFO at equal SLO attainment (pinned)
+# ---------------------------------------------------------------------------
+def test_greedy_and_optimized_beat_fifo_on_co2_pinned():
+    sess = _session()
+    w = sess.window()
+    batch = arrival_stream(20000, shape="camel", seed=3,
+                           camel_fracs=(0.2, 0.55), slack_h=(4.0, 12.0))
+    reports = {p: serve_window(batch, w, policy=p, backend="numpy")
+               for p in ("fifo", "greedy", "optimized")}
+    for p, r in reports.items():
+        assert r.n_admitted == batch.n, p     # nobody buys CO2 with drops
+        assert r.n_slo_miss == 0, p           # equal SLO-miss rate (zero)
+    fifo, greedy, opt = (reports[p].co2_kg
+                         for p in ("fifo", "greedy", "optimized"))
+    assert greedy < 0.9 * fifo                # >= 10 % CO2 saved
+    assert opt < 0.9 * fifo
+    # pin the fixed-seed numbers so a silent regression is loud
+    assert fifo == pytest.approx(3.3977, rel=0.02)
+    assert greedy == pytest.approx(2.7872, rel=0.02)
+    assert opt == pytest.approx(2.7251, rel=0.02)
+
+
+def test_schedules_reproducible_and_numpy_matches_jit():
+    sess = _session()
+    w = sess.window()
+    batch = arrival_stream(8000, shape="peak", seed=11, tier_mix=(0.7, 0.3),
+                           slack_h=(2.0, 10.0))
+    for policy in ("fifo", "greedy",
+                   OptimizedServingPolicy(candidates=24, iterations=4)):
+        pol = as_serving_policy(policy)
+        a1 = pol.assign(batch, w, DEFAULT_TIERS, seed=0)
+        a2 = pol.assign(batch, w, DEFAULT_TIERS, seed=0)
+        assert np.array_equal(a1.slot, a2.slot), a1.policy
+        assert np.array_equal(a1.tier, a2.tier), a1.policy
+        assert np.array_equal(a1.demand, a2.demand), a1.policy
+    # numpy fallback vs jit path: identical schedule, matching totals
+    r_np = serve_window(batch, w, policy="greedy", backend="numpy")
+    r_jax = serve_window(batch, w, policy="greedy", backend="jax")
+    assert np.array_equal(r_np.assignment.slot, r_jax.assignment.slot)
+    assert np.array_equal(r_np.assignment.tier, r_jax.assignment.tier)
+    assert r_np.co2_kg == pytest.approx(r_jax.co2_kg, rel=1e-6)
+    assert r_np.energy_kwh == pytest.approx(r_jax.energy_kwh, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# scale: 1M requests/day in one compiled sweep
+# ---------------------------------------------------------------------------
+def test_million_request_day_is_one_compiled_sweep():
+    n = 1_000_000
+    sess = _session(service_rate=30.0, policy="greedy")
+    sess.submit(n=n, shape="camel", seed=5, slack_h=(4.0, 12.0))
+    reset_scan_stats()
+    rep = sess.tick()
+    st = scan_stats()
+    assert st.requests_seen == n
+    assert st.requests_admitted == rep.n_admitted == n
+    assert st.chunks == 1                     # one compiled sweep
+    assert rep.n_slo_miss == 0
+    assert rep.co2_kg > 0 and rep.energy_kwh > 0
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle + counters
+# ---------------------------------------------------------------------------
+def test_session_submit_tick_drain_rollup():
+    sess = _session(policy="greedy", seed=9)
+    b1 = sess.submit(n=300, shape="random")
+    b2 = sess.submit(n=400, shape="peak")
+    assert sess.pending == 2
+    assert b1.t_arrive_h[0] != b2.t_arrive_h[0]   # per-window seeds differ
+    r1 = sess.tick()
+    assert sess.pending == 1 and r1.t0_h == 6.0
+    roll = sess.drain()
+    assert sess.pending == 0 and roll.n_windows == 2
+    assert roll.n_requests == 700
+    assert roll.n_admitted == sum(r.n_admitted for r in sess.reports)
+    assert roll.energy_kwh == pytest.approx(
+        sum(r.energy_kwh for r in sess.reports))
+    assert sess.reports[1].t0_h == 30.0           # clock advanced one window
+    with pytest.raises(ValueError, match="submit"):
+        sess.tick()
+    with pytest.raises(ValueError, match="exceeds the session window"):
+        _session(window_h=6.0).submit(arrival_stream(10, horizon_h=24.0))
+
+
+def test_serving_counters_accumulate_and_reset():
+    reset_scan_stats()
+    sess = _session(service_rate=0.02)        # heavy overload
+    sess.submit(n=500, shape="peak", seed=0, tier_mix=(0.5, 0.3, 0.2),
+                slack_h=(1.0, 4.0), mean_work=10.0)
+    rep = sess.tick()
+    st = scan_stats()
+    assert st.requests_seen == 500
+    assert st.requests_admitted == rep.n_admitted
+    assert st.requests_rejected == rep.n_rejected > 0
+    assert st.requests_degraded == rep.n_degraded > 0
+    assert rep.n_admitted + rep.n_rejected == 500
+    reset_scan_stats()
+    z = scan_stats()
+    assert (z.requests_seen, z.requests_admitted, z.requests_rejected,
+            z.requests_degraded) == (0, 0, 0, 0)
+
+
+def test_degrade_off_keeps_requested_tiers():
+    kw = dict(n=400, shape="peak", seed=2, tier_mix=(0.5, 0.5),
+              slack_h=(1.0, 4.0), mean_work=10.0)
+    sess = _session(service_rate=0.02,
+                    policy=GreedyServingPolicy(degrade=False))
+    sess.submit(**kw)
+    rep = sess.tick()
+    assert rep.n_degraded == 0
+    strict = rep.n_admitted
+    sess2 = _session(service_rate=0.02, policy="greedy")
+    sess2.submit(**kw)
+    rep2 = sess2.tick()
+    assert rep2.n_degraded > 0
+    assert rep2.n_admitted >= strict          # eco retry only ever helps
+
+
+def test_request_attribution_sums_to_window_totals():
+    sess = _session(policy="greedy")
+    sess.submit(n=1000, shape="camel", seed=4, tier_mix=(0.8, 0.2))
+    rep = sess.tick()
+    assert rep.request_energy_kwh.sum() == pytest.approx(rep.energy_kwh,
+                                                         rel=1e-9)
+    assert rep.request_co2_kg.sum() == pytest.approx(rep.co2_kg, rel=1e-9)
+    rejected = rep.assignment.slot < 0
+    assert np.all(rep.request_energy_kwh[rejected] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# live mode (decode-serving adapter)
+# ---------------------------------------------------------------------------
+def test_live_gate_and_queue_pressure_override():
+    clean, dirty = 3.5, 18.5                  # Midwest night vs evening
+    sess = ServingSession(carbon=MIDWEST, gate=0.42, max_queue=4,
+                          clock=SimClock(start_hour=clean))
+    assert float(MIDWEST.at(clean)) < 0.42 < float(MIDWEST.at(dirty))
+    assert sess.gate_open()
+    sess.clock.advance_s((dirty - clean) * 3600.0)
+    assert not sess.gate_open(queue_depth=0)
+    assert sess.gate_open(queue_depth=4)      # backlog forces admission
+    assert ServingSession(carbon=MIDWEST).gate_open()   # no gate -> open
+
+
+def test_live_record_tick_accounting():
+    tracker = RunTracker("live")
+    sess = ServingSession(carbon=MIDWEST, tracker=tracker,
+                          clock=SimClock(start_hour=2.0, speedup=3600.0),
+                          step_cost=StepCost(flops=1e12, hbm_bytes=1e10,
+                                             ici_bytes=1e8))
+    kwh = sess.record_tick(1.0, active=3, steps=2)
+    assert kwh > 0 and sess.live_units == 1
+    assert sess.live_energy_kwh == pytest.approx(kwh)
+    assert sess.live_co2_kg == pytest.approx(
+        kwh * float(MIDWEST.at(sess.clock.hours)))
+    # runtime-mode fallback (no StepCost) uses the machine profile
+    sess2 = ServingSession(carbon=MIDWEST, clock=SimClock(start_hour=2.0))
+    kwh2 = sess2.record_tick(10.0)
+    assert kwh2 > 0
+    assert tracker.records[0].meta["active"] == 3

@@ -78,14 +78,14 @@ def test_dashboard_artifacts(tmp_path):
 
 
 def test_serving_engine_with_carina_units():
+    from repro.core import ServingSession
     from repro.serving.engine import ServingEngine
     cfg = get_config("tinyllama-1.1b", smoke=True)
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
     tracker = RunTracker("serve")
-    ctrl = CarinaController(tracker=tracker, max_replicas=1,
-                            clock=SimClock(start_hour=3.0))
-    eng = ServingEngine(m, params, slots=2, s_max=64, controller=ctrl)
+    sess = ServingSession(tracker=tracker, clock=SimClock(start_hour=3.0))
+    eng = ServingEngine(m, params, slots=2, s_max=64, session=sess)
     for i in range(4):
         eng.submit(np.arange(4 + i, dtype=np.int32) % cfg.vocab_size,
                    max_new=3)
@@ -94,6 +94,8 @@ def test_serving_engine_with_carina_units():
     assert all(len(r.generated) == 3 for r in done)
     s = tracker.summary()
     assert s.units > 0 and s.energy_kwh > 0
+    assert sess.live_units == s.units
+    assert abs(sess.live_energy_kwh - s.energy_kwh) < 1e-12
 
 
 def test_greedy_decode_deterministic():
