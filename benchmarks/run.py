@@ -20,6 +20,11 @@ roofline/kernel benches.  Prints ``name,us_per_call,derived`` CSV rows.
                          campaigns speedup at M=8 S=500, oracle agreement,
                          jit-recompile count across varying fleet widths
                          (core/fleet.py + the coupled chunk kernels)
+  scaleout_sweep         device fan-out + precision policy: scenarios/sec
+                         vs virtual CPU device count at S in {1e3,1e4,1e5},
+                         fp64 vs mixed, via per-cell subprocesses (XLA reads
+                         the fan-out flag once at init); also writes
+                         BENCH_scaleout.json for the CI artifact trail
   serving_sweep          request-level scheduler: batched window scheduling
                          + execution throughput at 20k requests across the
                          four load shapes, CO2 saved vs carbon-blind FIFO,
@@ -406,6 +411,129 @@ def serving_sweep():
          f"speedup={us_loop / us_vec:.1f}x_(bar>=10x)")
 
 
+def _scaleout_worker(spec_json: str) -> None:
+    """Subprocess body for `scaleout_sweep`: one (S, devices, precision)
+    cell.  Runs in a fresh process because the virtual-device count is an
+    XLA_FLAGS setting the parent fixed *before* this interpreter imported
+    jax (see core/xla_profiles.py).  Prints a single JSON line."""
+    import dataclasses
+
+    from repro.core import (MachineProfile, SweepCase, calibrate_workload,
+                            hourly_schedule)
+    from repro.core.engine_jax import (compile_plan, execute_plan,
+                                       reset_scan_stats, scan_stats)
+    from repro.core.workload import OEM_CASE_1
+
+    spec = json.loads(spec_json)
+    S, devices, precision = spec["S"], spec["devices"], spec["precision"]
+    reps = spec.get("reps", 1)
+    wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+    # trim the campaign to ~2 days so one execute_plan is seconds, not
+    # minutes, at S=1e5; the scan cost model (lanes x slots x buckets)
+    # is unchanged
+    wl = dataclasses.replace(wl, n_scenarios=300_000)
+    trace = _week_trace()
+    scheds = [hourly_schedule(f"sc{i}", [0.35 + 0.6 * ((3 * i + h) % 24) / 23
+                                         for h in range(24)])
+              for i in range(min(S, 64))]
+    cases = [SweepCase(scheds[i % len(scheds)], wl, m, carbon=trace)
+             for i in range(S)]
+    plan = compile_plan(cases, progress_buckets=8, precision=precision)
+    execute_plan(plan, devices=devices)           # warm the jit cache
+    reset_scan_stats()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        execute_plan(plan, devices=devices)
+    dt = (time.perf_counter() - t0) / reps
+    st = scan_stats()
+    print(json.dumps({
+        "S": S, "devices": devices, "precision": precision,
+        "dt_s": dt, "scen_per_s": S / dt,
+        "devices_used": st.devices_used,
+        "precision_mode": st.precision_mode,
+        "jax_devices": len(jax.devices()),
+    }))
+
+
+def scaleout_sweep():
+    """Device fan-out + precision-policy scaling of the trace-scan engine
+    (acceptance trajectory: >=3x scenarios/sec at 8 virtual CPU devices,
+    S=1e5, plus a measured mixed-precision speedup with kWh/CO2 within
+    1e-6 of fp64 — pinned separately by tests/test_scaleout.py).
+
+    Each cell runs in a subprocess with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` because XLA
+    reads the flag exactly once at backend init.  Virtual devices share
+    the host's physical cores, so the achievable device speedup is
+    bounded by ``host_cores`` — recorded in the JSON so single-core
+    runs are not misread as regressions.  Besides the CSV rows, writes
+    machine-readable ``BENCH_scaleout.json`` (path override:
+    ``CARINA_BENCH_JSON``) for the CI artifact trail."""
+    import subprocess
+
+    from repro.core.xla_profiles import fanout_env
+
+    host_cores = os.cpu_count() or 1
+    s_values = (1_000, 10_000, 100_000)
+    if os.environ.get("CARINA_BENCH_FAST"):
+        s_values = (1_000, 10_000)
+    grid = []
+    for precision in ("fp64", "mixed"):
+        for S in s_values:
+            dev_counts = (1, 8)
+            if S == s_values[-1] and precision == "fp64":
+                dev_counts = (1, 2, 4, 8)
+            for devices in dev_counts:
+                grid.append((precision, S, devices))
+    rows = []
+    for precision, S, devices in grid:
+        spec = {"S": S, "devices": devices, "precision": precision,
+                "reps": 2 if S < 100_000 else 1}
+        env = fanout_env(devices)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(ROOT, "src"), env.get("PYTHONPATH", "")])
+        p = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "_scaleout_worker", json.dumps(spec)],
+            capture_output=True, text=True, env=env, timeout=1800)
+        if p.returncode != 0:
+            emit(f"scaleout_sweep/{precision}_S{S}_d{devices}", 0.0,
+                 f"worker_failed_rc={p.returncode}")
+            sys.stderr.write(p.stderr[-2000:] + "\n")
+            continue
+        rec = json.loads(p.stdout.strip().splitlines()[-1])
+        rows.append(rec)
+        emit(f"scaleout_sweep/{precision}_S{S}_d{devices}",
+             rec["dt_s"] * 1e6 / S,
+             f"scen_per_s={rec['scen_per_s']:.0f}_"
+             f"total_ms={rec['dt_s'] * 1e3:.0f}_"
+             f"devices_used={rec['devices_used']}")
+
+    def rate(precision, S, devices):
+        for r in rows:
+            if (r["precision"], r["S"], r["devices"]) == (precision, S, devices):
+                return r["scen_per_s"]
+        return None
+
+    speedups = {}
+    for S in s_values:
+        r1, r8 = rate("fp64", S, 1), rate("fp64", S, 8)
+        if r1 and r8:
+            speedups[f"fp64_S{S}_d8_vs_d1"] = r8 / r1
+        rf, rm = rate("fp64", S, 1), rate("mixed", S, 1)
+        if rf and rm:
+            speedups[f"mixed_vs_fp64_S{S}_d1"] = rm / rf
+    for key, val in sorted(speedups.items()):
+        emit(f"scaleout_sweep/speedup_{key}", 0.0,
+             f"x{val:.2f}_host_cores={host_cores}")
+    out_path = os.environ.get("CARINA_BENCH_JSON", "BENCH_scaleout.json")
+    with open(out_path, "w") as f:
+        json.dump({"bench": "scaleout_sweep", "host_cores": host_cores,
+                   "platform": jax.default_backend(),
+                   "rows": rows, "speedups": speedups}, f, indent=2)
+    emit("scaleout_sweep/json", 0.0, f"wrote_{out_path}_rows={len(rows)}")
+
+
 def oem_case_studies():
     from repro.core import policy_frontier
     from repro.core.workload import OEM_CASE_1, OEM_CASE_2
@@ -518,6 +646,7 @@ BENCHES = {
     "optimize_sweep": optimize_sweep,
     "fleet_sweep": fleet_sweep,
     "serving_sweep": serving_sweep,
+    "scaleout_sweep": scaleout_sweep,
     "oem_case_studies": oem_case_studies,
     "campaign_projection": campaign_projection,
     "roofline_table": roofline_table,
@@ -527,6 +656,9 @@ BENCHES = {
 
 def main(argv=None) -> None:
     """Run the named benchmarks (all of them with no arguments)."""
+    if argv and argv[0] == "_scaleout_worker":
+        _scaleout_worker(argv[1])
+        return
     names = argv if argv else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

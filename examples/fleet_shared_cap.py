@@ -54,8 +54,14 @@ def main():
         carina.carbon_gated_cap(0.45),
         carina.deadline_weighted_split(DEADLINES),
     ]
+    carina.reset_scan_stats()
     rows = fleet.sweep(assignments, deadlines=DEADLINES)
+    st = carina.scan_stats()
     print("=== fleet-wide assignments (grouped-lane sweep, coupled)")
+    print(f"  engine: devices_used={st.devices_used} "
+          f"precision={st.precision_mode or 'fp64'} "
+          f"pallas_dispatches={st.pallas_dispatches} "
+          f"chunks={st.chunks} jit_shapes={st.jit_compiles}")
     for fr in rows:
         print(f"  {fr.policy:28s} {fmt(fr)}")
         for r in fr.campaigns:
@@ -100,6 +106,12 @@ def main():
     for r, d in zip(res.results, DEADLINES):
         assert r.runtime_h <= d * 1.02, (r.policy, r.runtime_h, d)
     print("\nall campaigns met their deadlines under the shared cap")
+    st = carina.scan_stats()
+    print(f"engine totals: devices_used={st.devices_used} "
+          f"precision={st.precision_mode or 'fp64'} "
+          f"pallas_dispatches={st.pallas_dispatches} "
+          f"chunks={st.chunks} jit_shapes={st.jit_compiles} "
+          "(scale-out knobs: Fleet.sweep(devices=, precision=, pallas=))")
 
 
 if __name__ == "__main__":

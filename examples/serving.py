@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import (RunTracker, ServingSession, SimClock, StepCost,
-                        render_run_dashboard)
+                        render_run_dashboard, scan_stats)
 from repro.models import build_model
 from repro.serving.engine import ServingEngine
 
@@ -61,6 +61,13 @@ def main():
     print(f"  session: {session.live_units} ticks, "
           f"{session.live_energy_kwh:.3e} kWh, "
           f"{session.live_co2_kg:.3e} kg CO2e")
+    st = scan_stats()
+    print(f"  engine: devices_used={st.devices_used} "
+          f"precision={st.precision_mode or 'fp64'} "
+          f"pallas_dispatches={st.pallas_dispatches} "
+          f"requests_seen={st.requests_seen} "
+          "(live ticks are accounted directly; window-mode sweeps run "
+          "through execute_plan and report its scale-out counters here)")
 
     md = render_run_dashboard(tracker.close(), "experiments/serving")
     print()

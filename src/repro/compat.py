@@ -5,26 +5,62 @@ and renamed its replication-check kwarg (`check_rep` -> `check_vma`).
 Import it from here with the new-style `check_vma` spelling and it works
 on both sides of the move.  `axis_size` appeared in jax.lax later than
 `axis_index`; the fallback is the standard psum-of-ones identity.
-`enable_x64` is the double-precision context manager from
-jax.experimental, re-implemented over the config flag where absent.
+`enable_x64` is the double-precision context manager; implemented here
+over the config flag with an explicit frame stack so nested and
+out-of-order exits restore the right value on every jax version.
 """
 from __future__ import annotations
 
 import contextlib
+import threading
 
 import jax
 
-try:
-    from jax.experimental import enable_x64  # noqa: F401
-except ImportError:                           # pragma: no cover - new jax
-    @contextlib.contextmanager
-    def enable_x64(new_val: bool = True):
-        old = jax.config.jax_enable_x64
-        jax.config.update("jax_enable_x64", new_val)
-        try:
-            yield
-        finally:
-            jax.config.update("jax_enable_x64", old)
+
+class _X64Frames(threading.local):
+    """Per-thread stack of live `enable_x64` frames."""
+
+    def __init__(self):
+        self.stack = []  # list of [token, saved_value]
+
+
+_X64 = _X64Frames()
+
+
+@contextlib.contextmanager
+def enable_x64(new_val: bool = True):
+    """Set the `jax_enable_x64` flag for the duration of the context.
+
+    Unlike a naive save/restore over the global config (the old
+    fallback), each frame is tracked on a stack so the manager is
+    reentrancy-safe: nested contexts restore the value their *own*
+    entry observed, and an inner frame closed out of order (e.g. a
+    generator finalized while a newer context is active) hands its
+    saved value to the frame above it instead of clobbering the live
+    setting.  This became load-bearing once the per-plan dtype policy
+    made the engine open fp64 contexts inside callers' own contexts.
+    """
+    token = object()
+    stack = _X64.stack
+    stack.append([token, bool(jax.config.jax_enable_x64)])
+    jax.config.update("jax_enable_x64", bool(new_val))
+    try:
+        yield
+    finally:
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i][0] is token:
+                saved = stack[i][1]
+                del stack[i]
+                if i < len(stack):
+                    # Out-of-order exit: a newer frame is still active.
+                    # Leave the flag as that frame set it, but make the
+                    # newer frame restore *our* saved value when it
+                    # exits (it captured the value we had installed).
+                    stack[i][1] = saved
+                else:
+                    jax.config.update("jax_enable_x64", saved)
+                break
+
 
 if hasattr(jax.lax, "axis_size"):
     axis_size = jax.lax.axis_size

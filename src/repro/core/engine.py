@@ -249,7 +249,9 @@ def sweep(cases: Sequence[SweepCase],
           price: Optional[Signal] = None,
           progress_buckets: int = 32,
           backend: Optional[str] = None,
-          max_days: int = 120) -> List[SimResult]:
+          max_days: int = 120,
+          precision: str = "fp64",
+          devices: Optional[int] = None) -> List[SimResult]:
     """Evaluate all cases in vectorized passes; order is preserved.
 
     Each case is dispatched to the periodic 24-slot path when its
@@ -261,7 +263,10 @@ def sweep(cases: Sequence[SweepCase],
     path instead of raising.
 
     `progress_buckets`, `backend` ("jax"/"numpy") and `max_days` (the
-    trace grid's horizon cap) tune the trace path.
+    trace grid's horizon cap) tune the trace path, as do the scale-out
+    knobs `precision` ("fp64" exact / "mixed" fp32 dynamics with fp64
+    accumulators) and `devices` (shard_map lane fan-out, None = all
+    local devices) — see `engine_jax.compile_plan`/`execute_plan`.
     """
     if not len(cases):
         return []
@@ -294,7 +299,8 @@ def sweep(cases: Sequence[SweepCase],
                                (case_slots_per_hour(c) for c in sub))
         res = trace_sweep(sub, price=price, slots_per_hour=sph,
                           progress_buckets=progress_buckets, backend=backend,
-                          max_days=max_days)
+                          max_days=max_days, precision=precision,
+                          devices=devices)
         for i, r in zip(trace_idx, res):
             out[i] = r
     return out  # type: ignore[return-value]

@@ -56,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
                     Sequence, Set, Tuple)
 
@@ -120,6 +121,12 @@ class ScanStats:
     layer (core/serve.py) as it schedules arrival windows: seen is
     every request offered, admitted/rejected partition them, and
     degraded counts admissions that only fit at a cheaper quality tier.
+    Scale-out observability: `devices_used` is the widest `shard_map`
+    fan-out any chunk executed on (0 until a scan runs, 1 for purely
+    single-device scans); `precision_mode` is the dtype policy
+    ("fp64"/"mixed") of the most recent `execute_plan`; and
+    `pallas_dispatches` counts launches of the coupled-throttle Pallas
+    kernel (0 whenever the jnp fallback ran instead).
     Counters accumulate per process — pass `scan_stats(reset=True)`
     (or call `reset_scan_stats()`) to zero them between measurements.
     """
@@ -132,6 +139,9 @@ class ScanStats:
     requests_admitted: int = 0    # ... assigned a service slot
     requests_rejected: int = 0    # ... infeasible at every allowed tier
     requests_degraded: int = 0    # ... admitted at a cheaper tier
+    devices_used: int = 0         # max devices any chunk sharded across
+    precision_mode: str = ""      # dtype policy of the last executed plan
+    pallas_dispatches: int = 0    # coupled-chunk Pallas kernel launches
     jit_shapes: Set[tuple] = dataclasses.field(default_factory=set)
 
     @property
@@ -171,6 +181,9 @@ def reset_scan_stats() -> None:
     _STATS.requests_admitted = 0
     _STATS.requests_rejected = 0
     _STATS.requests_degraded = 0
+    _STATS.devices_used = 0
+    _STATS.precision_mode = ""
+    _STATS.pallas_dispatches = 0
     _STATS.jit_shapes = set()
 
 
@@ -587,6 +600,9 @@ class SweepPlan:
         default_factory=lambda: np.zeros(0))  # (G,), inf = uncoupled
     group_office_kw: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))  # (G,) peak office draw
+    #: dtype policy of the scan ("fp64" exact, or "mixed": fp32 state
+    #: and inputs with fp64 kWh/CO2/cost accumulators)
+    precision: str = "fp64"
     grids: Dict[tuple, np.ndarray] = dataclasses.field(default_factory=dict)
 
     @property
@@ -622,8 +638,8 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
                  max_days: int = 120,
                  group_sizes: Optional[Sequence[int]] = None,
                  group_caps_kw: Optional[Sequence[Optional[float]]] = None,
-                 group_office_kw: Optional[Sequence[float]] = None
-                 ) -> SweepPlan:
+                 group_office_kw: Optional[Sequence[float]] = None,
+                 precision: str = "fp64") -> SweepPlan:
     """Lower a case batch into a `SweepPlan` (the scan's input form).
 
     Per-case classification (closed-form profile / probe / decide_grid)
@@ -641,7 +657,18 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
     curtailed by the shared `model.site_throttle` factor.  With the
     defaults every case is its own uncoupled group and the scan is
     byte-identical to the ungrouped engine.
+
+    `precision` selects the scan's dtype policy on the JAX backend:
+    `"fp64"` (default) keeps the exact double-precision behaviour;
+    `"mixed"` runs the per-slot dynamics (remaining work, rates,
+    elapsed time) in fp32 while the kWh/CO2/cost sums still accumulate
+    in fp64 — kWh/CO2 totals stay within ~1e-6 relative of fp64 (pinned
+    by tests) at roughly half the memory traffic.  The NumPy backend
+    ignores the policy and always runs fp64.
     """
+    if precision not in ("fp64", "mixed"):
+        raise ValueError(f"unknown precision {precision!r}; "
+                         "use 'fp64' or 'mixed'")
     sph = int(slots_per_hour)
     B = int(progress_buckets)
     max_hours = float(max_days) * 24.0
@@ -831,6 +858,7 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
         bg_day=np.stack([_bg_table(cases[i].bands, sph)
                          for i in lane_case]),
         est_h=max(comp.est_h for comp in compiled),
+        precision=precision,
         group_sizes=group_sizes, case_group=case_group,
         lane_group=np.asarray(lane_group, dtype=int),
         group_cap_kw=caps, group_office_kw=office)
@@ -968,18 +996,19 @@ def _scan_chunk_np_coupled(u_tab, b_tab, rowidx, bg, cf, pr, lens,
 
 
 if _HAS_JAX:
-    @functools.partial(jax.jit, static_argnames=("B",))
-    def _scan_chunk_jax(u_tab, b_tab, rowidx, bg, cf, pr, lens,
-                        remaining, rt, kwh, co2, cost,
-                        n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac,
-                        B: int):
+    def _scan_chunk_jax_impl(u_tab, b_tab, rowidx, bg, cf, pr, lens,
+                             remaining, rt, kwh, co2, cost,
+                             n_scen, rate, oh, idle, dyn, alpha, gamma,
+                             ohfrac, B: int):
         A = u_tab.shape[0]
         sidx = jnp.arange(A)
 
         def step(carry, xs):
             remaining, rt, kwh, co2, cost = carry
             row, bg_t, cf_t, pr_t, ln = xs          # cf_t: (A, E)
-            prog = 1.0 - remaining / n_scen
+            # mixed precision: the lookup/rates run at the tables' dtype
+            # while the carried state stays fp64 (no-op cast on fp64)
+            prog = (1.0 - remaining / n_scen).astype(u_tab.dtype)
             u, bt = _bucket_lookup(jnp, u_tab, b_tab, sidx, row, prog, B)
             r = model.rates(u, bt, bg_t, rate_at_full=rate,
                             batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
@@ -999,19 +1028,21 @@ if _HAS_JAX:
         final, _ = jax.lax.scan(step, init, xs)
         return final
 
-    @functools.partial(jax.jit, static_argnames=("B", "G"))
-    def _scan_chunk_jax_coupled(u_tab, b_tab, rowidx, bg, cf, pr, lens,
-                                gid, cap_g, office,
-                                remaining, rt, kwh, co2, cost, speak,
-                                n_scen, rate, oh, idle, dyn, alpha, gamma,
-                                ohfrac, B: int, G: int):
+    _scan_chunk_jax = functools.partial(
+        jax.jit, static_argnames=("B",))(_scan_chunk_jax_impl)
+
+    def _scan_chunk_jax_coupled_impl(u_tab, b_tab, rowidx, bg, cf, pr,
+                                     lens, gid, cap_g, office,
+                                     remaining, rt, kwh, co2, cost, speak,
+                                     n_scen, rate, oh, idle, dyn, alpha,
+                                     gamma, ohfrac, B: int, G: int):
         A = u_tab.shape[0]
         sidx = jnp.arange(A)
 
         def step(carry, xs):
             remaining, rt, kwh, co2, cost, speak = carry
             row, bg_t, cf_t, pr_t, ln, off_t = xs      # off_t: (G,)
-            prog = 1.0 - remaining / n_scen
+            prog = (1.0 - remaining / n_scen).astype(u_tab.dtype)
             u, bt = _bucket_lookup(jnp, u_tab, b_tab, sidx, row, prog, B)
             r = model.rates(u, bt, bg_t, rate_at_full=rate,
                             batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
@@ -1052,23 +1083,152 @@ if _HAS_JAX:
         final, _ = jax.lax.scan(step, init, xs)
         return final
 
+    _scan_chunk_jax_coupled = functools.partial(
+        jax.jit, static_argnames=("B", "G"))(_scan_chunk_jax_coupled_impl)
+
+    @functools.lru_cache(maxsize=64)
+    def _sharded_plain(n_dev: int, B: int):
+        """Jitted `shard_map` wrapper of the plain chunk kernel: every
+        argument (and every output) is a lane-leading array split along
+        the mesh's "lanes" axis, so the scan runs embarrassingly
+        parallel — zero cross-device communication, and each lane's
+        arithmetic is bitwise-identical to the single-device kernel."""
+        from jax.sharding import Mesh, PartitionSpec
+
+        from repro.compat import shard_map
+        mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("lanes",))
+        spec = PartitionSpec("lanes")
+        fn = shard_map(functools.partial(_scan_chunk_jax_impl, B=B),
+                       mesh=mesh, in_specs=(spec,) * 20,
+                       out_specs=(spec,) * 5, check_vma=False)
+        return jax.jit(fn)
+
+    @functools.lru_cache(maxsize=64)
+    def _sharded_coupled(n_dev: int, B: int, G: int):
+        """Jitted `shard_map` wrapper of the coupled chunk kernel.  The
+        caller partitions lanes at *group* boundaries (groups are
+        contiguous in lane order) and stacks per-device blocks, so each
+        device's segment-sum sees only its own G=`G` local groups and
+        the site-cap fixed point never crosses a shard."""
+        from jax.sharding import Mesh, PartitionSpec
+
+        from repro.compat import shard_map
+        mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("lanes",))
+        spec = PartitionSpec("lanes")
+        fn = shard_map(functools.partial(_scan_chunk_jax_coupled_impl,
+                                         B=B, G=G),
+                       mesh=mesh, in_specs=(spec,) * 24,
+                       out_specs=(spec,) * 6, check_vma=False)
+        return jax.jit(fn)
+
 
 def _pad_pow2(n: int, minimum: int = 8) -> int:
     return max(minimum, 1 << max(n - 1, 0).bit_length())
 
 
+def _pad_lanes(n: int, n_dev: int = 1) -> int:
+    """Padded lane count: `n_dev` equal device blocks, each a pow2
+    bucket.  For `n_dev == 1` this is exactly the historic
+    `_pad_pow2(n)`; for power-of-two fan-outs it still equals the
+    single-device padding whenever that padding is divisible, so
+    slot-work accounting (and shape-bucket counts) match across device
+    counts."""
+    per = -(-n // n_dev)
+    return n_dev * _pad_pow2(per, minimum=max(8 // n_dev, 1))
+
+
+def _plan_dtypes(plan: SweepPlan):
+    """(compute, accumulator) dtypes of the plan's precision policy.
+
+    The compute dtype covers the per-slot physics inputs (decision
+    tables, grid/carbon/price series, slot lengths, machine scalars);
+    the accumulator dtype covers the *carried* scan state, including
+    `remaining`.  Keeping the trajectory state fp64 while the table
+    lookups and `model.rates` chains run fp32 is what holds the mixed
+    policy's kWh/CO2 totals within 1e-6 relative of fp64 — an fp32
+    `remaining` compounds per-slot rounding into the slot-time
+    trajectory and blows past that bar."""
+    if plan.precision == "mixed":
+        return np.float32, np.float64
+    return np.float64, np.float64
+
+
+def _resolve_devices(devices, use_jax: bool) -> int:
+    """Number of devices the chunk kernels shard across.
+
+    `devices=None` auto-fans across every local device; an explicit
+    count is clamped to what the platform exposes.  The NumPy backend
+    is always single-device."""
+    if not use_jax or not _HAS_JAX:
+        return 1
+    avail = len(jax.devices())
+    if devices is None:
+        return avail
+    n = int(devices)
+    if n < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    return min(n, avail)
+
+
+@functools.lru_cache(maxsize=1)
+def _pallas_available() -> bool:
+    """Can the coupled-throttle Pallas kernel be imported at all?"""
+    try:
+        import repro.kernels.coupled_throttle  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+def _resolve_pallas(pallas, use_jax: bool) -> str:
+    """Resolve the Pallas dispatch policy to "off"/"on"/"interpret".
+
+    `pallas=None` defers to the ``CARINA_PALLAS`` environment variable
+    (default "auto": compiled Pallas on TPU backends, jnp fallback
+    elsewhere).  `True`/"on" forces the kernel — in interpreter mode on
+    non-TPU backends, where Pallas has no compiled lowering;
+    "interpret" forces interpreter mode everywhere (the test pin path);
+    `False`/"off" disables.  Whenever the kernel module is unavailable
+    the answer is "off" — the jnp kernel is always a clean fallback."""
+    if pallas is None:
+        pallas = os.environ.get("CARINA_PALLAS", "auto")
+    if pallas is True:
+        pallas = "on"
+    elif pallas is False:
+        pallas = "off"
+    pallas = str(pallas).lower()
+    if pallas not in ("auto", "on", "off", "interpret"):
+        raise ValueError(f"unknown pallas policy {pallas!r}; use "
+                         "'auto', 'on', 'off' or 'interpret'")
+    if pallas == "off" or not use_jax or not _HAS_JAX:
+        return "off"
+    if pallas == "auto":
+        pallas = "on" if jax.default_backend() == "tpu" else "off"
+    if pallas == "off" or not _pallas_available():
+        return "off"
+    if pallas == "on" and jax.default_backend() != "tpu":
+        return "interpret"
+    return pallas
+
+
 def _run_chunk(plan: SweepPlan, active: np.ndarray, inputs, state_slices,
-               use_jax: bool) -> tuple:
+               use_jax: bool, n_dev: int = 1,
+               pallas: str = "off") -> tuple:
     """Execute one chunk for the active lanes, padding the batch to
     bucketed shapes on the JAX backend so repeated sweeps reuse the
     compiled kernel instead of recompiling per exact size.
 
     Site-coupled plans (any finite group cap) route to the grouped
     kernel; everything else takes the exact pre-fleet code path, so
-    plain sweeps stay byte-identical."""
+    plain sweeps stay byte-identical.  With `n_dev > 1` the padded lane
+    axis is split into equal device blocks and dispatched through
+    `shard_map` — lanes never interact in the plain kernel, so the
+    sharded result is bitwise-identical per lane.  The plan's
+    `precision` policy picks the input/state dtypes (`_plan_dtypes`);
+    fp64 accumulators ride along either way."""
     if plan.coupled:
         return _run_chunk_coupled(plan, active, inputs, state_slices,
-                                  use_jax)
+                                  use_jax, n_dev, pallas)
     u_tab, b_tab, rowidx, bg, cf, pr, lens = inputs
     A, C = rowidx.shape
     Bg = u_tab.shape[2]
@@ -1079,9 +1239,11 @@ def _run_chunk(plan: SweepPlan, active: np.ndarray, inputs, state_slices,
         out = _scan_chunk_np(u_tab, b_tab, rowidx, bg, cf, pr, lens,
                              state_slices, scalars, Bg)
         _STATS.chunks += 1
+        _STATS.devices_used = max(_STATS.devices_used, 1)
         return out
 
-    Ap = _pad_pow2(A)
+    n_dev = max(1, min(n_dev, A))
+    Ap = _pad_lanes(A, n_dev)
     if Ap != A:
         pad = Ap - A
 
@@ -1101,16 +1263,24 @@ def _run_chunk(plan: SweepPlan, active: np.ndarray, inputs, state_slices,
         scalars = (padv(n_scen, 1.0), padv(rate), padv(oh), padv(idle),
                    padv(dyn), padv(alpha, 1.0), padv(gamma),
                    padv(ohfrac))
-    sig = (Ap, u_tab.shape[1], Bg, C, cf.shape[1], plan.price is not None)
+    cdt, adt = _plan_dtypes(plan)
+    sig = (Ap, u_tab.shape[1], Bg, C, cf.shape[1], plan.price is not None,
+           plan.precision, n_dev)
     _STATS.jit_shapes.add(sig)
     _STATS.chunks += 1
     _STATS.slot_work += Ap * C
+    _STATS.devices_used = max(_STATS.devices_used, n_dev)
     with enable_x64():
-        out = _scan_chunk_jax(
-            *(jnp.asarray(a) for a in (u_tab, b_tab, rowidx, bg, cf, pr,
-                                       lens)),
-            *(jnp.asarray(a) for a in state_slices),
-            *(jnp.asarray(a) for a in scalars), B=Bg)
+        ins = (jnp.asarray(u_tab, cdt), jnp.asarray(b_tab, cdt),
+               jnp.asarray(rowidx), jnp.asarray(bg, cdt),
+               jnp.asarray(cf, cdt), jnp.asarray(pr, cdt),
+               jnp.asarray(lens, cdt))
+        st = tuple(jnp.asarray(a, adt) for a in state_slices)
+        sc = tuple(jnp.asarray(a, cdt) for a in scalars)
+        if n_dev > 1:
+            out = _sharded_plain(n_dev, Bg)(*ins, *st, *sc)
+        else:
+            out = _scan_chunk_jax(*ins, *st, *sc, B=Bg)
     out = tuple(np.asarray(o) for o in out)
     if Ap != A:
         out = tuple(o[:A] for o in out)
@@ -1118,14 +1288,21 @@ def _run_chunk(plan: SweepPlan, active: np.ndarray, inputs, state_slices,
 
 
 def _run_chunk_coupled(plan: SweepPlan, active: np.ndarray, inputs,
-                       state_slices, use_jax: bool) -> tuple:
+                       state_slices, use_jax: bool, n_dev: int = 1,
+                       pallas: str = "off") -> tuple:
     """One chunk through the grouped site-coupled kernel.
 
     Active lanes' groups are remapped to dense ids (finished groups
     drop out with their lanes); group count and lane count are both
     padded to power-of-two buckets on the JAX backend, with padded
     lanes assigned a dummy uncapped group, so the jitted kernel's
-    shape-signature set stays small as the fleet drains."""
+    shape-signature set stays small as the fleet drains.
+
+    Device fan-out splits lanes at *group* boundaries only (`n_dev` is
+    clamped to the live group count), so the site-cap segment-sum and
+    throttle fixed point stay device-local.  On a single device the
+    coupled step can instead dispatch to the Pallas kernel
+    (kernels/coupled_throttle.py) per the resolved `pallas` policy."""
     u_tab, b_tab, rowidx, bg, cf, pr, lens = inputs
     A, C = rowidx.shape
     Bg = u_tab.shape[2]
@@ -1146,7 +1323,18 @@ def _run_chunk_coupled(plan: SweepPlan, active: np.ndarray, inputs,
                                      gid, cap_g, office, state_slices,
                                      scalars, Bg)
         _STATS.chunks += 1
+        _STATS.devices_used = max(_STATS.devices_used, 1)
         return out
+
+    n_dev = max(1, min(n_dev, Gd))
+    if n_dev > 1:
+        return _run_chunk_coupled_sharded(
+            plan, inputs, state_slices, scalars, gid, cap_g, office,
+            Gd, n_dev)
+    if pallas in ("on", "interpret"):
+        return _run_chunk_coupled_pallas(
+            plan, inputs, state_slices, scalars, gid, cap_g, office,
+            Gd, interpret=(pallas == "interpret"))
 
     Ap = _pad_pow2(A)
     if Ap != A:
@@ -1171,22 +1359,196 @@ def _run_chunk_coupled(plan: SweepPlan, active: np.ndarray, inputs,
     Gp = _pad_pow2(Gd + 1, minimum=2)     # +1: the dummy group always fits
     cap_g = np.pad(cap_g, (0, Gp - Gd), constant_values=np.inf)
     office = np.pad(office, ((0, Gp - Gd), (0, 0)))
+    cdt, adt = _plan_dtypes(plan)
     sig = (Ap, u_tab.shape[1], Bg, C, cf.shape[1], Gp,
-           plan.price is not None, "coupled")
+           plan.price is not None, "coupled", plan.precision, 1)
     _STATS.jit_shapes.add(sig)
     _STATS.chunks += 1
     _STATS.slot_work += Ap * C
+    _STATS.devices_used = max(_STATS.devices_used, 1)
     with enable_x64():
         out = _scan_chunk_jax_coupled(
-            *(jnp.asarray(a) for a in (u_tab, b_tab, rowidx, bg, cf, pr,
-                                       lens)),
-            jnp.asarray(gid), jnp.asarray(cap_g), jnp.asarray(office),
-            *(jnp.asarray(a) for a in state_slices),
-            *(jnp.asarray(a) for a in scalars), B=Bg, G=Gp)
+            jnp.asarray(u_tab, cdt), jnp.asarray(b_tab, cdt),
+            jnp.asarray(rowidx), jnp.asarray(bg, cdt),
+            jnp.asarray(cf, cdt), jnp.asarray(pr, cdt),
+            jnp.asarray(lens, cdt),
+            jnp.asarray(gid), jnp.asarray(cap_g, cdt),
+            jnp.asarray(office, cdt),
+            *(jnp.asarray(a, adt) for a in state_slices),
+            *(jnp.asarray(a, cdt) for a in scalars), B=Bg, G=Gp)
     out = tuple(np.asarray(o) for o in out)
     if Ap != A:
         out = tuple(o[:A] for o in out)
     return out
+
+
+def _group_cuts(cnt: np.ndarray, n_dev: int) -> np.ndarray:
+    """Contiguous group-boundary indices (`n_dev + 1`,) splitting `cnt`
+    (lanes per group) into device parts balanced by lane count; every
+    part gets at least one group (requires `n_dev <= len(cnt)`)."""
+    Gd = len(cnt)
+    csum = np.concatenate([[0], np.cumsum(cnt)])
+    total = int(csum[-1])
+    bounds = np.empty(n_dev + 1, dtype=int)
+    bounds[0] = 0
+    for d in range(1, n_dev):
+        target = total * d / n_dev
+        g = int(np.searchsorted(csum, target, side="left"))
+        bounds[d] = min(max(g, bounds[d - 1] + 1), Gd - (n_dev - d))
+    bounds[n_dev] = Gd
+    return bounds
+
+
+def _run_chunk_coupled_sharded(plan: SweepPlan, inputs, state_slices,
+                               scalars, gid: np.ndarray,
+                               cap_g: np.ndarray, office: np.ndarray,
+                               Gd: int, n_dev: int) -> tuple:
+    """Coupled chunk across devices: groups (contiguous in lane order)
+    are partitioned into `n_dev` balanced contiguous parts, each part's
+    lanes padded to a common pow2 block and its groups renumbered
+    device-locally (plus one dummy uncapped group for padded lanes),
+    then the blocks are stacked along the lane axis and dispatched
+    through the `shard_map` wrapper — each device runs the unchanged
+    coupled kernel on exactly its own groups."""
+    u_tab, b_tab, rowidx, bg, cf, pr, lens = inputs
+    A, C = rowidx.shape
+    Bg = u_tab.shape[2]
+    cnt = np.bincount(gid, minlength=Gd)
+    bounds = _group_cuts(cnt, n_dev)
+    csum = np.concatenate([[0], np.cumsum(cnt)])
+    lane_lo = csum[bounds[:-1]]
+    lane_hi = csum[bounds[1:]]
+    Ld = _pad_pow2(int((lane_hi - lane_lo).max()),
+                   minimum=max(8 // n_dev, 1))
+    Gp = _pad_pow2(int((bounds[1:] - bounds[:-1]).max()) + 1, minimum=2)
+
+    def stack_lane(a, fill=0.0):
+        out = np.full((n_dev * Ld,) + a.shape[1:], fill, dtype=a.dtype)
+        for d in range(n_dev):
+            lo, hi = lane_lo[d], lane_hi[d]
+            out[d * Ld:d * Ld + (hi - lo)] = a[lo:hi]
+        return out
+
+    gid_s = np.empty(n_dev * Ld, dtype=np.int32)
+    cap_s = np.full(n_dev * Gp, np.inf)
+    off_s = np.zeros((n_dev * Gp, C))
+    for d in range(n_dev):
+        lo, hi = lane_lo[d], lane_hi[d]
+        gb0, gb1 = bounds[d], bounds[d + 1]
+        gid_s[d * Ld:(d + 1) * Ld] = gb1 - gb0        # dummy group
+        gid_s[d * Ld:d * Ld + (hi - lo)] = gid[lo:hi] - gb0
+        cap_s[d * Gp:d * Gp + (gb1 - gb0)] = cap_g[gb0:gb1]
+        off_s[d * Gp:d * Gp + (gb1 - gb0)] = office[gb0:gb1]
+
+    remaining, rt, kwh, co2, cost, speak = state_slices
+    n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac = scalars
+    cdt, adt = _plan_dtypes(plan)
+    sig = (n_dev * Ld, u_tab.shape[1], Bg, C, cf.shape[1], Gp,
+           plan.price is not None, "coupled", plan.precision, n_dev)
+    _STATS.jit_shapes.add(sig)
+    _STATS.chunks += 1
+    _STATS.slot_work += n_dev * Ld * C
+    _STATS.devices_used = max(_STATS.devices_used, n_dev)
+    with enable_x64():
+        out = _sharded_coupled(n_dev, Bg, Gp)(
+            jnp.asarray(stack_lane(u_tab), cdt),
+            jnp.asarray(stack_lane(b_tab, 1.0), cdt),
+            jnp.asarray(stack_lane(rowidx)),
+            jnp.asarray(stack_lane(bg), cdt),
+            jnp.asarray(stack_lane(cf), cdt),
+            jnp.asarray(stack_lane(pr), cdt),
+            jnp.asarray(stack_lane(lens, 3600.0 / plan.sph), cdt),
+            jnp.asarray(gid_s), jnp.asarray(cap_s, cdt),
+            jnp.asarray(off_s, cdt),
+            jnp.asarray(stack_lane(remaining), adt),
+            jnp.asarray(stack_lane(rt), adt),
+            jnp.asarray(stack_lane(kwh), adt),
+            jnp.asarray(stack_lane(co2), adt),
+            jnp.asarray(stack_lane(cost), adt),
+            jnp.asarray(stack_lane(speak), adt),
+            jnp.asarray(stack_lane(n_scen, 1.0), cdt),
+            jnp.asarray(stack_lane(rate), cdt),
+            jnp.asarray(stack_lane(oh), cdt),
+            jnp.asarray(stack_lane(idle), cdt),
+            jnp.asarray(stack_lane(dyn), cdt),
+            jnp.asarray(stack_lane(alpha, 1.0), cdt),
+            jnp.asarray(stack_lane(gamma), cdt),
+            jnp.asarray(stack_lane(ohfrac), cdt))
+    final = []
+    for o in out:
+        o = np.asarray(o)
+        final.append(np.concatenate(
+            [o[d * Ld:d * Ld + (lane_hi[d] - lane_lo[d])]
+             for d in range(n_dev)]))
+    return tuple(final)
+
+
+def _run_chunk_coupled_pallas(plan: SweepPlan, inputs, state_slices,
+                              scalars, gid: np.ndarray, cap_g: np.ndarray,
+                              office: np.ndarray, Gd: int,
+                              interpret: bool) -> tuple:
+    """Coupled chunk through the Pallas kernel: lanes are repacked into
+    a dense (group, lane-in-group) layout with the per-slot decision
+    rows pre-gathered, the kernel runs one program per group with the
+    slot loop inside, and results scatter back to flat lane order.
+    Parity with the jnp kernel is pinned to <1e-9 by tests."""
+    from repro.kernels.coupled_throttle import coupled_chunk
+    u_tab, b_tab, rowidx, bg, cf, pr, lens = inputs
+    A, C = rowidx.shape
+    Bg = u_tab.shape[2]
+    E = cf.shape[1]
+    cnt = np.bincount(gid, minlength=Gd)
+    csum = np.concatenate([[0], np.cumsum(cnt)])
+    pos = np.arange(A) - csum[gid]        # position within own group
+    Lp = _pad_pow2(int(cnt.max()))
+    Gp = _pad_pow2(Gd, minimum=1)
+
+    def dense(a, fill=0.0):
+        out = np.full((Gp, Lp) + a.shape[1:], fill, dtype=a.dtype)
+        out[gid, pos] = a
+        return out
+
+    # hoist the per-lane dynamic row gather out of the kernel
+    u_rows = np.take_along_axis(u_tab, rowidx[:, :, None], axis=1)
+    b_rows = np.take_along_axis(b_tab, rowidx[:, :, None], axis=1)
+    cap_p = np.pad(cap_g, (0, Gp - Gd), constant_values=np.inf)
+    off_p = np.pad(office, ((0, Gp - Gd), (0, 0)))
+    remaining, rt, kwh, co2, cost, speak = state_slices
+    n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac = scalars
+    cdt, adt = _plan_dtypes(plan)
+    sig = ("pallas", Gp, Lp, C, Bg, E, plan.price is not None,
+           plan.precision)
+    _STATS.jit_shapes.add(sig)
+    _STATS.chunks += 1
+    _STATS.slot_work += Gp * Lp * C
+    _STATS.devices_used = max(_STATS.devices_used, 1)
+    _STATS.pallas_dispatches += 1
+    with enable_x64():
+        out = coupled_chunk(
+            jnp.asarray(dense(u_rows), cdt),
+            jnp.asarray(dense(b_rows, 1.0), cdt),
+            jnp.asarray(dense(bg), cdt),
+            jnp.asarray(dense(cf), cdt),
+            jnp.asarray(dense(pr), cdt),
+            jnp.asarray(dense(lens, 3600.0 / plan.sph), cdt),
+            jnp.asarray(cap_p, cdt), jnp.asarray(off_p, cdt),
+            jnp.asarray(dense(remaining), adt),
+            jnp.asarray(dense(rt), adt),
+            jnp.asarray(dense(kwh), adt),
+            jnp.asarray(dense(co2), adt),
+            jnp.asarray(dense(cost), adt),
+            jnp.asarray(dense(speak), adt),
+            jnp.asarray(dense(n_scen, 1.0), cdt),
+            jnp.asarray(dense(rate), cdt),
+            jnp.asarray(dense(oh), cdt),
+            jnp.asarray(dense(idle), cdt),
+            jnp.asarray(dense(dyn), cdt),
+            jnp.asarray(dense(alpha, 1.0), cdt),
+            jnp.asarray(dense(gamma), cdt),
+            jnp.asarray(dense(ohfrac), cdt),
+            iters=model.SITE_THROTTLE_ITERS, finish_frac=_FINISH_FRAC,
+            interpret=interpret)
+    return tuple(np.asarray(o)[gid, pos] for o in out)
 
 
 def _chunk_inputs(plan: SweepPlan, active: np.ndarray, t0: int,
@@ -1268,7 +1630,9 @@ def _stall_diagnostic(plan: SweepPlan, lane: int, remaining: float) -> str:
 
 def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
                  chunk_days: Optional[int] = None,
-                 mode: str = "chunked") -> _ScanState:
+                 mode: str = "chunked",
+                 devices: Optional[int] = None,
+                 pallas=None) -> _ScanState:
     """Run the scan over a compiled plan and return the final state.
 
     `mode="chunked"` (default) is the resumable scan: fixed-shape chunks
@@ -1277,6 +1641,17 @@ def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
     the previous engine behaviour — one scan sized by the duration
     estimate, re-run from t=0 with a doubled horizon on undershoot —
     for equivalence tests and wasted-work benchmarks.
+
+    `devices` shards the lane axis across local devices via `shard_map`
+    (`None` = every device `jax.devices()` reports; expose virtual CPU
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    *before* jax initializes — see core/xla_profiles.py).  Uncoupled
+    sweeps shard bitwise-identically; coupled plans split only at group
+    boundaries so the site cap never crosses a shard.  `pallas` picks
+    the coupled-chunk kernel implementation (None → ``CARINA_PALLAS``
+    env, default "auto"; see `_resolve_pallas`); the Pallas path is
+    single-device only and the jnp kernel remains the fallback.  The
+    scan's dtype policy is fixed at `compile_plan(precision=...)` time.
 
     Stall detection: provably-dead periodic tables are diagnosed at
     compile time; beyond that, the chunked executor raises the stall
@@ -1291,11 +1666,14 @@ def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
     if chunk_days is not None and int(chunk_days) < 1:
         raise ValueError(f"chunk_days must be >= 1, got {chunk_days}")
     use_jax = _use_jax(backend)
+    n_dev = _resolve_devices(devices, use_jax)
+    pallas_mode = _resolve_pallas(pallas, use_jax)
+    _STATS.precision_mode = plan.precision if use_jax else "fp64"
     H = 24 * plan.sph
     L = plan.n_lanes
     max_slots = plan.max_slots
     if mode == "monolithic":
-        return _execute_monolithic(plan, use_jax)
+        return _execute_monolithic(plan, use_jax, n_dev, pallas_mode)
 
     C = int(chunk_days or DEFAULT_CHUNK_DAYS) * H
     coupled = plan.coupled
@@ -1315,7 +1693,8 @@ def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
         if coupled:
             state = state + (speak[active],)
         before = remaining[active].copy()
-        out = _run_chunk(plan, active, inputs, state, use_jax)
+        out = _run_chunk(plan, active, inputs, state, use_jax, n_dev,
+                         pallas_mode)
         if coupled:
             speak[active] = out[5]
         remaining[active], rt[active], kwh[active], co2[active], \
@@ -1346,7 +1725,8 @@ def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
     return _ScanState(remaining, rt, kwh, co2, cost, speak)
 
 
-def _execute_monolithic(plan: SweepPlan, use_jax: bool) -> _ScanState:
+def _execute_monolithic(plan: SweepPlan, use_jax: bool, n_dev: int = 1,
+                        pallas: str = "off") -> _ScanState:
     """The pre-chunking behaviour: scan everything from t=0 over one
     estimated horizon, double and re-scan on undershoot."""
     H = 24 * plan.sph
@@ -1360,7 +1740,8 @@ def _execute_monolithic(plan: SweepPlan, use_jax: bool) -> _ScanState:
                  np.zeros((L, plan.E)), np.zeros(L))
         if plan.coupled:
             state = state + (np.zeros(L),)
-        out = _run_chunk(plan, all_lanes, inputs, state, use_jax)
+        out = _run_chunk(plan, all_lanes, inputs, state, use_jax, n_dev,
+                         pallas)
         remaining = out[0]
         if (remaining <= _FINISH_FRAC * plan.n_scen).all():
             return _ScanState(*out)
@@ -1490,13 +1871,22 @@ class TraceObjective:
 
     A `SignalEnsemble` carbon turns `co2_kg` into a (..., E) block — the
     substrate of `Campaign.optimize(robust=...)`.
+
+    `precision="mixed"` runs the traced scan dynamics in fp32 with fp64
+    kWh/CO2/cost accumulators (same policy as
+    `compile_plan(precision=...)`) — useful to halve optimizer search
+    cost; the default keeps exact fp64.
     """
 
     def __init__(self, case, *, price: Optional[Signal] = None,
                  slots_per_hour: int = 1, horizon_h: Optional[float] = None,
                  batch_size: float = 50.0, max_days: int = 120,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, precision: str = "fp64"):
+        if precision not in ("fp64", "mixed"):
+            raise ValueError(f"unknown precision {precision!r}; "
+                             "use 'fp64' or 'mixed'")
         sph = int(slots_per_hour)
+        self.precision = precision
         self.case = case
         self.sph = sph
         self.n_slots = 24 * sph
@@ -1613,12 +2003,18 @@ class TraceObjective:
             return (remaining - r.scen_per_s * dt, rt + dt, kwh + e,
                     co2, cost + e * pr_t), None
 
+        mixed = self.precision == "mixed"
         zero = jnp.zeros(shape)
         co2_0 = jnp.zeros(shape + (E,)) if E else zero
+        # mixed policy: fp32 per-slot inputs/physics, fp64 carried state
+        # and accumulators (matches the engine's `_plan_dtypes` split)
+        cdt = jnp.float32 if mixed else zero.dtype
+        if mixed:
+            u_t = u_t.astype(cdt)
         init = (jnp.full(shape, n_scen), zero, zero, co2_0, zero)
-        cf_xs = jnp.asarray(self.cf.T if E else self.cf)
-        xs = (u_t, jnp.asarray(self.bg), cf_xs,
-              jnp.asarray(self.pr), jnp.asarray(self.lens))
+        cf_xs = jnp.asarray(self.cf.T if E else self.cf, cdt)
+        xs = (u_t, jnp.asarray(self.bg, cdt), cf_xs,
+              jnp.asarray(self.pr, cdt), jnp.asarray(self.lens, cdt))
         (remaining, rt, kwh, co2, cost), _ = jax.lax.scan(step, init, xs)
         return EvalMetrics(kwh, co2, rt / 3600.0, cost, remaining / n_scen)
 
@@ -1937,8 +2333,10 @@ def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
                 mode: str = "chunked",
                 group_sizes: Optional[Sequence[int]] = None,
                 group_caps_kw: Optional[Sequence[Optional[float]]] = None,
-                group_office_kw: Optional[Sequence[float]] = None
-                ) -> List[SimResult]:
+                group_office_kw: Optional[Sequence[float]] = None,
+                precision: str = "fp64",
+                devices: Optional[int] = None,
+                pallas=None) -> List[SimResult]:
     """Evaluate cases on the trace grid; order is preserved.
 
     Compile -> execute -> summarize: the case batch is lowered into a
@@ -1961,13 +2359,18 @@ def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
     into fleet groups sharing a site power envelope (see `compile_plan`);
     `repro.core.fleet.fleet_sweep` is the session-level entry that also
     returns per-group site rollups.
+
+    Scale-out knobs: `precision` is the plan dtype policy (see
+    `compile_plan`), `devices` the `shard_map` lane fan-out and
+    `pallas` the coupled-kernel dispatch policy (see `execute_plan`).
     """
     if not len(cases):
         return []
     plan = compile_plan(cases, price, slots_per_hour=slots_per_hour,
                         progress_buckets=progress_buckets, max_days=max_days,
                         group_sizes=group_sizes, group_caps_kw=group_caps_kw,
-                        group_office_kw=group_office_kw)
+                        group_office_kw=group_office_kw,
+                        precision=precision)
     state = execute_plan(plan, backend=backend, chunk_days=chunk_days,
-                         mode=mode)
+                         mode=mode, devices=devices, pallas=pallas)
     return summarize_plan(plan, state)

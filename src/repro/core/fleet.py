@@ -140,7 +140,10 @@ def fleet_sweep(fleet_cases: Sequence[Sequence[SweepCase]],
                 names: Optional[Sequence[str]] = None,
                 progress_buckets: int = 32, max_days: int = 240,
                 backend: Optional[str] = None,
-                chunk_days: Optional[int] = None) -> List[FleetResult]:
+                chunk_days: Optional[int] = None,
+                precision: str = "fp64",
+                devices: Optional[int] = None,
+                pallas=None) -> List[FleetResult]:
     """Evaluate fleet cases (each a group of M member `SweepCase`s) on
     the grouped-lane trace engine; order is preserved.
 
@@ -148,6 +151,11 @@ def fleet_sweep(fleet_cases: Sequence[Sequence[SweepCase]],
     batch runs through the regular `sweep()` dispatcher (periodic cases
     keep the cheap 24-slot path, and results are bitwise-identical to
     sweeping the members independently).
+
+    `precision`/`devices`/`pallas` are the engine's scale-out knobs
+    (dtype policy, shard_map lane fan-out, coupled-kernel dispatch —
+    see `engine_jax.compile_plan` and `execute_plan`); coupled sweeps
+    shard at group boundaries so the site cap stays device-local.
     """
     if not len(fleet_cases):
         return []
@@ -157,7 +165,8 @@ def fleet_sweep(fleet_cases: Sequence[Sequence[SweepCase]],
         names = [grp[0].name() for grp in fleet_cases]
     if site.power_cap_kw is None:
         res = sweep(flat, price=price, progress_buckets=progress_buckets,
-                    backend=backend, max_days=max_days)
+                    backend=backend, max_days=max_days,
+                    precision=precision, devices=devices)
         out = []
         i = 0
         for name, M in zip(names, sizes):
@@ -177,8 +186,10 @@ def fleet_sweep(fleet_cases: Sequence[Sequence[SweepCase]],
                         progress_buckets=progress_buckets, max_days=max_days,
                         group_sizes=sizes,
                         group_caps_kw=[site.power_cap_kw] * G,
-                        group_office_kw=[site.office_kw] * G)
-    state = execute_plan(plan, backend=backend, chunk_days=chunk_days)
+                        group_office_kw=[site.office_kw] * G,
+                        precision=precision)
+    state = execute_plan(plan, backend=backend, chunk_days=chunk_days,
+                         devices=devices, pallas=pallas)
     res = summarize_plan(plan, state)
     out = []
     i = 0
@@ -415,7 +426,10 @@ class Fleet:
               carbon_trace=None, carbon_ensemble=None,
               deltas: bool = False,
               backend: Optional[str] = None,
-              max_days: int = 240) -> List[FleetResult]:
+              max_days: int = 240,
+              precision: str = "fp64",
+              devices: Optional[int] = None,
+              pallas=None) -> List[FleetResult]:
         """Evaluate fleet assignments jointly under the site.
 
         Each assignment is an `AllocationSchedule`, a single schedule
@@ -444,7 +458,9 @@ class Fleet:
                               label=lbl)
                   for (_, scheds), lbl in zip(resolved, labels)]
         out = fleet_sweep(groups, self.site, price=self.site.price,
-                          names=labels, backend=backend, max_days=max_days)
+                          names=labels, backend=backend, max_days=max_days,
+                          precision=precision, devices=devices,
+                          pallas=pallas)
         if deltas:
             for fr in out:
                 for c, r in zip(self.campaigns, fr.campaigns):

@@ -366,7 +366,8 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
                       seed: int = 0, backend: Optional[str] = None,
                       pareto: bool = False,
                       robust: Optional[str] = None,
-                      cvar_alpha: Optional[float] = None) -> OptimizeResult:
+                      cvar_alpha: Optional[float] = None,
+                      precision: str = "fp64") -> OptimizeResult:
     """Search the `ParametricSchedule` space for the case's best schedule.
 
     `objective` is a metric name, a weights mapping, or an `Objective`;
@@ -393,6 +394,11 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
     expected CO2 across the members, "cvar" the mean of the worst
     `1 - cvar_alpha` tail, "worst" the maximum (see `reduce_ensemble`);
     all three run under both the jitted and the NumPy backends.
+
+    `precision="mixed"` evaluates search candidates with fp32 scan
+    dynamics (fp64 accumulators — see `TraceObjective`); the final
+    reported row always re-runs through the engine at exact fp64, so
+    only the search trajectory is approximate.
 
     See docs/OPTIMIZER.md for objective/constraint semantics and for
     when grad beats population search.
@@ -425,7 +431,7 @@ def optimize_schedule(case, objective: Union[str, Mapping, Objective] = "co2",
         horizon_h = obj.constraints["runtime_h"] * 1.25 + 24.0
     to = TraceObjective(case, price=price, slots_per_hour=sph,
                         horizon_h=horizon_h, batch_size=float(batch_size),
-                        backend=backend)
+                        backend=backend, precision=precision)
 
     if np.ndim(init) == 0:
         init_u = np.full(n, float(init))

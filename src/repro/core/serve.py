@@ -568,7 +568,10 @@ def _u_for_demand(demand: np.ndarray, window: ServingWindow,
 
 def execute_assignment(assignment: Assignment, window: ServingWindow,
                        tiers: Sequence[QualityTier], *, site=None,
-                       backend: Optional[str] = None
+                       backend: Optional[str] = None,
+                       precision: str = "fp64",
+                       devices: Optional[int] = None,
+                       pallas=None
                        ) -> Tuple[List[SimResult], AllocationSchedule,
                                   Optional[float]]:
     """Lower the admitted demand block into per-tier scan lanes and run
@@ -576,7 +579,8 @@ def execute_assignment(assignment: Assignment, window: ServingWindow,
     compiled sweep for the whole window.  Returns the per-lane
     `SimResult`s (empty tiers skipped), the executed
     `AllocationSchedule` demand block, and the peak site draw (kW,
-    site-coupled runs only)."""
+    site-coupled runs only).  `precision`/`devices`/`pallas` forward to
+    the engine's scale-out knobs (see `engine_jax.execute_plan`)."""
     day = 24 * window.sph
     day_idx = _day_slot_index(window)
     trace = _window_trace(window)
@@ -618,8 +622,10 @@ def execute_assignment(assignment: Assignment, window: ServingWindow,
                       group_office_kw=[float(getattr(site, "office_kw", 0.0)
                                              or 0.0)])
     plan = compile_plan(cases, price=window.price,
-                        slots_per_hour=window.sph, **groups)
-    state = execute_plan(plan, backend=backend)
+                        slots_per_hour=window.sph, precision=precision,
+                        **groups)
+    state = execute_plan(plan, backend=backend, devices=devices,
+                         pallas=pallas)
     results = summarize_plan(plan, state)
     peak = (float(np.max(state.site_kw_peak))
             if state.site_kw_peak is not None else None)

@@ -1,0 +1,200 @@
+"""Pallas kernel for the site-coupled chunk step of the trace engine.
+
+The coupled chunk is the one hot path the generic `jax.lax.scan`
+lowering handles worst: every slot does a per-group segment-sum of the
+active lanes' draw plus `model.SITE_THROTTLE_ITERS` damped fixed-point
+steps of `model.site_throttle`, and the scatter-add (`.at[gid].add`)
+keeps round-tripping lane state through HBM between slots.
+
+This kernel restages the problem in a dense ``(group, lane)`` layout:
+grid = (G,), one program per group ("parallel" — groups never
+interact), with the whole slot loop running inside the kernel as a
+`jax.lax.fori_loop` whose carry is the scan state.  The segment-sum
+collapses to a plain `jnp.sum` over the program's own lane block, and
+the per-lane decision-row gather is hoisted *outside* the kernel by the
+caller (rows are pre-gathered to ``(G, Lp, C, B)``), so the kernel body
+is pure dense arithmetic.
+
+Progress-bucket interpolation is expressed as a hat-function weighted
+sum over bucket centers — mathematically identical to the engine's
+`_bucket_lookup` two-point interpolation (the hat weights are zero
+except at the same two buckets, and adding exact fp zeros is exact) —
+because a dynamic per-lane gather of ``b0`` would defeat the dense
+layout.  Numerical parity with the jnp coupled kernel is pinned to
+<1e-9 by tests/test_scaleout.py and the fleet oracle tests.
+
+The engine treats this module as optional: import failures or
+non-TPU backends without ``interpret=True`` fall back to the jnp
+kernel (see `_resolve_pallas` in core/engine_jax.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import model
+from repro.kernels._compat import CompilerParams
+
+
+def _kernel(u_ref, b_ref, bg_ref, cf_ref, pr_ref, lens_ref, cap_ref,
+            off_ref, rem_ref, rt_ref, kwh_ref, co2_ref, cost_ref,
+            speak_ref, nsc_ref, rate_ref, oh_ref, idle_ref, dyn_ref,
+            alpha_ref, gamma_ref, ohf_ref,
+            rem_o, rt_o, kwh_o, co2_o, cost_o, speak_o,
+            *, C, B, iters, finish_frac):
+    u_tab = u_ref[0]                    # (Lp, C, B)
+    b_tab = b_ref[0]
+    bg = bg_ref[0]                      # (Lp, C)
+    cf = cf_ref[0]                      # (Lp, E, C)
+    pr = pr_ref[0]
+    lens = lens_ref[0]
+    cap = cap_ref[0]                    # scalar: this group's site cap
+    off = off_ref[0]                    # (C,) office draw over the chunk
+    nsc = nsc_ref[0]
+    rate = rate_ref[0]
+    oh = oh_ref[0]
+    idle = idle_ref[0]
+    dyn = dyn_ref[0]
+    alpha = alpha_ref[0]
+    gamma = gamma_ref[0]
+    ohf = ohf_ref[0]
+    Lp = u_tab.shape[0]
+    centers = jax.lax.broadcasted_iota(u_tab.dtype, (Lp, B), 1)
+
+    def step(t, carry):
+        rem, rt, kwh, co2, cost, speak = carry
+        # mixed precision: carried state is fp64, physics runs at the
+        # tables' dtype (no-op cast on fp64 plans)
+        prog = (1.0 - rem / nsc).astype(u_tab.dtype)
+        if B == 1:
+            u = u_tab[:, t, 0]
+            bt = b_tab[:, t, 0]
+        else:
+            x = jnp.clip(prog * B - 0.5, 0.0, B - 1.0)
+            w = jnp.maximum(1.0 - jnp.abs(x[:, None] - centers), 0.0)
+            u = jnp.sum(u_tab[:, t, :] * w, axis=-1)
+            bt = jnp.sum(b_tab[:, t, :] * w, axis=-1)
+        bg_t = bg[:, t]
+        r = model.rates(u, bt, bg_t, rate_at_full=rate,
+                        batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
+                        alpha=alpha, gamma=gamma, overhead_w_frac=ohf,
+                        xp=jnp)
+        active = rem > finish_frac * nsc
+        base = jnp.sum(jnp.where(
+            active, model.power_w(bg_t, idle, dyn, alpha, xp=jnp),
+            0.0) / 1000.0)
+        head = cap - off[t]
+        f = jnp.asarray(1.0, u.dtype)
+        r2 = r
+        for _ in range(iters):
+            draw = jnp.sum(jnp.where(active, r2.p_avg_w, 0.0) / 1000.0)
+            f = model.site_throttle(draw, base, head, f, xp=jnp)
+            r2 = model.rates(u * f, bt, bg_t, rate_at_full=rate,
+                             batch_overhead_s=oh, idle_w=idle, dyn_w=dyn,
+                             alpha=alpha, gamma=gamma,
+                             overhead_w_frac=ohf, xp=jnp)
+        dt = jnp.where(
+            rem > 0.0,
+            jnp.minimum(lens[:, t],
+                        rem / jnp.maximum(r2.scen_per_s, 1e-30)),
+            0.0)
+        e = r2.kwh_per_s * dt
+        site_kw = jnp.sum(jnp.where(active, r2.p_avg_w, 0.0)
+                          / 1000.0) + off[t]
+        speak = jnp.where(active, jnp.maximum(speak, site_kw), speak)
+        return (rem - r2.scen_per_s * dt, rt + dt, kwh + e,
+                co2 + e[:, None] * cf[:, :, t], cost + e * pr[:, t],
+                speak)
+
+    init = (rem_ref[0], rt_ref[0], kwh_ref[0], co2_ref[0], cost_ref[0],
+            speak_ref[0])
+    rem, rt, kwh, co2, cost, speak = jax.lax.fori_loop(0, C, step, init)
+    rem_o[0] = rem
+    rt_o[0] = rt
+    kwh_o[0] = kwh
+    co2_o[0] = co2
+    cost_o[0] = cost
+    speak_o[0] = speak
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iters", "finish_frac", "interpret"))
+def coupled_chunk(u_rows, b_rows, bg, cf, pr, lens, cap_g, office,
+                  remaining, rt, kwh, co2, cost, speak,
+                  n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac,
+                  *, iters: int, finish_frac: float,
+                  interpret: bool = False):
+    """One coupled chunk over a dense ``(G, Lp, ...)`` group layout.
+
+    `u_rows`/`b_rows` are the *pre-gathered* decision rows
+    ``tab[lane, rowidx[lane, t], :]`` with shape ``(G, Lp, C, B)``;
+    `bg`/`pr`/`lens` are ``(G, Lp, C)``, `cf` is ``(G, Lp, E, C)``,
+    `cap_g` is ``(G,)``, `office` is ``(G, C)``, and state/scalars are
+    ``(G, Lp)`` (co2 ``(G, Lp, E)``).  Padded lanes must carry the
+    engine's standard safe fills (remaining 0 → inactive, n_scen 1,
+    alpha 1) and padded groups an infinite cap.  Returns the six state
+    arrays after C slots.
+    """
+    G, Lp, C, B = u_rows.shape
+    E = cf.shape[2]
+
+    def lane2(g):
+        return (g, 0)
+
+    def lane3(g):
+        return (g, 0, 0)
+
+    def lane4(g):
+        return (g, 0, 0, 0)
+
+    def group1(g):
+        return (g,)
+
+    in_specs = [
+        pl.BlockSpec((1, Lp, C, B), lane4),          # u_rows
+        pl.BlockSpec((1, Lp, C, B), lane4),          # b_rows
+        pl.BlockSpec((1, Lp, C), lane3),             # bg
+        pl.BlockSpec((1, Lp, E, C), lane4),          # cf
+        pl.BlockSpec((1, Lp, C), lane3),             # pr
+        pl.BlockSpec((1, Lp, C), lane3),             # lens
+        pl.BlockSpec((1,), group1),                  # cap_g
+        pl.BlockSpec((1, C), lane2),                 # office
+        pl.BlockSpec((1, Lp), lane2),                # remaining
+        pl.BlockSpec((1, Lp), lane2),                # rt
+        pl.BlockSpec((1, Lp), lane2),                # kwh
+        pl.BlockSpec((1, Lp, E), lane3),             # co2
+        pl.BlockSpec((1, Lp), lane2),                # cost
+        pl.BlockSpec((1, Lp), lane2),                # speak
+    ] + [pl.BlockSpec((1, Lp), lane2)] * 8           # physics scalars
+    out_specs = [
+        pl.BlockSpec((1, Lp), lane2),
+        pl.BlockSpec((1, Lp), lane2),
+        pl.BlockSpec((1, Lp), lane2),
+        pl.BlockSpec((1, Lp, E), lane3),
+        pl.BlockSpec((1, Lp), lane2),
+        pl.BlockSpec((1, Lp), lane2),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((G, Lp), remaining.dtype),
+        jax.ShapeDtypeStruct((G, Lp), rt.dtype),
+        jax.ShapeDtypeStruct((G, Lp), kwh.dtype),
+        jax.ShapeDtypeStruct((G, Lp, E), co2.dtype),
+        jax.ShapeDtypeStruct((G, Lp), cost.dtype),
+        jax.ShapeDtypeStruct((G, Lp), speak.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_kernel, C=C, B=B, iters=iters,
+                          finish_frac=finish_frac),
+        grid=(G,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(u_rows, b_rows, bg, cf, pr, lens, cap_g, office,
+      remaining, rt, kwh, co2, cost, speak,
+      n_scen, rate, oh, idle, dyn, alpha, gamma, ohfrac)
