@@ -638,6 +638,49 @@ def kernel_micro():
     emit("kernel/ssm_chunked_scan_2k", us3, "chunk=64")
 
 
+def mpc_sweep():
+    """Receding-horizon MPC loop cost (ISSUE 8): re-plan latency and
+    solve-time amortization vs the control interval K, plus the
+    zero-recompute ratio — slots carried across re-plans over total
+    slots executed (1.0 = every re-plan resumed, nothing re-scanned)."""
+    import dataclasses as _dc
+
+    from repro.core import MachineProfile, SweepCase, calibrate_workload
+    from repro.core.engine_jax import reset_scan_stats, scan_stats
+    from repro.core.mpc import MPCSession
+    from repro.core.policy import constant_schedule
+    from repro.core.signal import as_trace
+    from repro.core.workload import OEM_CASE_1
+
+    rng = np.random.RandomState(17)
+    h = np.arange(24 * 21, dtype=float)
+    day = h // 24
+    vals = (0.40 + (0.18 + 0.10 * np.sin(day * 2.1))
+            * np.sin((h % 24) * 2 * np.pi / 24 + 0.8 * np.sin(day * 0.9))
+            + 0.02 * rng.randn(h.size)).clip(0.05)
+    truth = as_trace(tuple(vals), name="bench-truth")
+    wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+    wl = _dc.replace(wl, n_scenarios=wl.n_scenarios // 8)
+    case = SweepCase(constant_schedule(1.0), wl, m, carbon=truth,
+                     start_hour=9.0, deadline_h=96.0)
+    solver = dict(method="cem", candidates=24, iterations=4, seed=0)
+    for K in (None, 24.0, 8.0, 4.0):
+        reset_scan_stats()
+        t0 = time.perf_counter()
+        out = MPCSession(case, truth, constraints={"runtime_h": 96.0},
+                         forecast="day_ahead", replan_every_h=K,
+                         solver=solver).run()
+        dt = time.perf_counter() - t0
+        stats = scan_stats(reset=True)
+        replan_us = (sum(r.solve_s for r in out.replans[1:]) * 1e6
+                     / max(out.n_replans, 1))
+        emit(f"mpc_sweep/K_{'inf' if K is None else int(K)}", dt * 1e6,
+             f"replans={out.n_replans}_replan_ms={replan_us / 1e3:.0f}_"
+             f"solve_frac={out.solve_s / dt:.2f}_"
+             f"slots_reused={stats.slots_reused}_"
+             f"co2_kg={out.realized_co2_kg:.3f}")
+
+
 BENCHES = {
     "fig1_policy_frontier": fig1_policy_frontier,
     "frontier_sweep": frontier_sweep,
@@ -647,6 +690,7 @@ BENCHES = {
     "fleet_sweep": fleet_sweep,
     "serving_sweep": serving_sweep,
     "scaleout_sweep": scaleout_sweep,
+    "mpc_sweep": mpc_sweep,
     "oem_case_studies": oem_case_studies,
     "campaign_projection": campaign_projection,
     "roofline_table": roofline_table,

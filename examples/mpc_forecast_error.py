@@ -1,0 +1,94 @@
+"""The value of a forecast: receding-horizon MPC vs forecast quality.
+
+CARINA's optimizer plans against a carbon signal, but real grid signals
+are forecasts that go stale mid-campaign.  This example runs the same
+campaign closed-loop under `Campaign.run_mpc` with three forecast
+models — `oracle` (perfect foresight), `day_ahead` (truth plus seeded
+multiplicative noise on future hours), and `persistence` (yesterday
+again) — and prints the value-of-forecast curve on *realized* CO2, the
+experiment both West et al. carbon-shifting studies (arXiv:2503.13705,
+arXiv:2508.14625) use to show savings hinge on forecast quality.  An
+open-loop run (K=inf, one solve, never corrected) under the noisy
+forecast shows what re-planning buys back.
+
+    PYTHONPATH=src python examples/mpc_forecast_error.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import repro.carina as carina
+
+FAST = bool(os.environ.get("CARINA_EXAMPLE_FAST"))   # CI smoke mode
+
+
+def ground_truth(days: int = 14) -> carina.TraceSignal:
+    """Synthetic realized carbon with day-to-day regime drift: the
+    diurnal swing's amplitude and phase wander across days, so
+    yesterday's shape is a genuinely imperfect predictor of today's."""
+    rng = np.random.default_rng(11)
+    h = np.arange(days * 24, dtype=float)
+    day = h // 24
+    amp = 0.18 + 0.10 * np.sin(day * 2.1) + 0.03 * rng.standard_normal(
+        h.size)
+    phase = 0.8 * np.sin(day * 0.9)
+    vals = 0.40 + amp * np.sin((h % 24) * 2 * np.pi / 24 + phase)
+    vals += 0.02 * rng.standard_normal(h.size)
+    return carina.as_trace(vals.clip(0.05), name="realized-grid")
+
+
+def main() -> None:
+    truth = ground_truth()
+    wl, _ = carina.calibrate_workload(carina.OEM_CASE_1,
+                                      carina.MachineProfile())
+    # 1/4 of OEM case 1 (~45 h at full intensity) against a 96 h
+    # deadline: enough slack that *when* you run decides the emissions.
+    # Scale the measured calibration point with the scenario count, or
+    # Campaign.calibrated() would re-derive a 4x slower rate.
+    wl = dataclasses.replace(wl, n_scenarios=wl.n_scenarios // 4,
+                             measured_hours=wl.measured_hours / 4,
+                             measured_kwh=wl.measured_kwh / 4)
+    campaign = carina.Campaign(wl, carbon=truth)
+    solver = (dict(method="cem", candidates=12, iterations=2, seed=0)
+              if FAST else
+              dict(method="cem", candidates=32, iterations=6, seed=0))
+    deadline, K = 96.0, 24.0
+
+    runs = [
+        ("oracle      (K=24h)", carina.oracle(), K),
+        ("day_ahead   (K=24h)", carina.day_ahead(noise_sigma=0.35,
+                                                 seed=0), K),
+        ("persistence (K=24h)", carina.persistence(), K),
+        ("day_ahead  (open loop)", carina.day_ahead(noise_sigma=0.35,
+                                                    seed=0), None),
+    ]
+    print(f"OEM case 1 (scaled 1/4), deadline {deadline:.0f} h, "
+          f"re-plan every {K:.0f} h")
+    print(f"{'forecast':24s} {'realized CO2':>13s} {'vs oracle':>10s} "
+          f"{'replans':>8s} {'fc MAE':>8s}")
+    rows = {}
+    for label, model, k in runs:
+        out = campaign.run_mpc(truth, deadline_h=deadline, forecast=model,
+                               replan_every_h=k, **solver)
+        rows[label] = out
+        base = rows[runs[0][0]].realized_co2_kg
+        print(f"{label:24s} {out.realized_co2_kg:10.3f} kg "
+              f"{100 * (out.realized_co2_kg / base - 1):+9.1f}% "
+              f"{out.n_replans:8d} {out.forecast_mae:8.3f}")
+
+    oracle_co2 = rows[runs[0][0]].realized_co2_kg
+    worst = max(r.realized_co2_kg for r in rows.values())
+    print(f"\nvalue of a perfect forecast: "
+          f"{100 * (worst / oracle_co2 - 1):.1f}% realized CO2 between "
+          f"the oracle and the worst run above.  Every re-plan resumed "
+          f"from carried executor state — zero already-executed slots "
+          f"recomputed (slots_reused="
+          f"{rows[runs[2][0]].slots_reused} for persistence).")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,9 @@ from repro.core import (  # noqa: F401
     HourlySignal, TOU_PRICE, TraceSignal, as_ensemble, as_trace,
     background_signal, carbon_signal, default_signals, is_periodic_24h,
     sample_signal, trace_windows,
+    # forecast-error models (MPC loop itself is lazy below)
+    ForecastModel, OracleForecast, PersistenceForecast, DayAheadForecast,
+    as_forecast, oracle, persistence, day_ahead,
     # ensemble reporting
     EnsembleStats, ensemble_stats,
     # time structure + models
@@ -58,6 +61,10 @@ _LAZY = ("trace_sweep", "TraceObjective", "EvalMetrics", "evaluate_params",
          "FleetTraceObjective", "FleetEvalMetrics",
          "SweepPlan", "compile_plan", "execute_plan", "summarize_plan",
          "ScanStats", "scan_stats", "reset_scan_stats",
+         "PlanCursor", "new_cursor", "execute_interval", "replace_tables",
+         # receding-horizon MPC (drives optimize + the trace engine)
+         "MPCSession", "FleetMPCSession", "MPCResult", "ReplanRecord",
+         "run_mpc",
          "Objective", "OptimizeResult", "FleetOptimizeResult",
          "optimize_schedule", "optimize_fleet", "pareto_front",
          "reduce_ensemble", "ROBUST_MODES", "scalarize_fleet",

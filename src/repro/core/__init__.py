@@ -34,10 +34,13 @@ from repro.core.schedule import (AllocationSchedule, CarbonGateSchedule,  # noqa
                                  progress_ramp_schedule, proportional_split)
 from repro.core.session import Campaign, CampaignReport  # noqa: F401
 from repro.core.signal import (TOU_PRICE, BandSignal, ConstantSignal,  # noqa: F401
-                               HourlySignal, Signal, SignalEnsemble,
-                               SignalSet, TraceSignal, as_ensemble, as_trace,
-                               background_signal, carbon_signal,
-                               default_signals, is_periodic_24h,
+                               DayAheadForecast, ForecastModel,
+                               HourlySignal, OracleForecast,
+                               PersistenceForecast, Signal, SignalEnsemble,
+                               SignalSet, TraceSignal, as_ensemble,
+                               as_forecast, as_trace, background_signal,
+                               carbon_signal, day_ahead, default_signals,
+                               is_periodic_24h, oracle, persistence,
                                sample_signal, trace_windows)
 from repro.core.simulator import (EnsembleStats, SimResult,  # noqa: F401
                                   calibrate_workload, ensemble_stats,
@@ -66,6 +69,16 @@ _LAZY = {
     "ScanStats": "repro.core.engine_jax",
     "scan_stats": "repro.core.engine_jax",
     "reset_scan_stats": "repro.core.engine_jax",
+    "PlanCursor": "repro.core.engine_jax",
+    "new_cursor": "repro.core.engine_jax",
+    "execute_interval": "repro.core.engine_jax",
+    "replace_tables": "repro.core.engine_jax",
+    # MPC loop: drives optimize + engine_jax, so it rides the lazy door
+    "MPCSession": "repro.core.mpc",
+    "FleetMPCSession": "repro.core.mpc",
+    "MPCResult": "repro.core.mpc",
+    "ReplanRecord": "repro.core.mpc",
+    "run_mpc": "repro.core.mpc",
     "FleetTraceObjective": "repro.core.engine_jax",
     "FleetEvalMetrics": "repro.core.engine_jax",
     "Objective": "repro.core.optimize",

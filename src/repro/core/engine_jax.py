@@ -127,6 +127,11 @@ class ScanStats:
     ("fp64"/"mixed") of the most recent `execute_plan`; and
     `pallas_dispatches` counts launches of the coupled-throttle Pallas
     kernel (0 whenever the jnp fallback ran instead).
+    MPC observability: `replans` counts `replace_tables` calls (one per
+    mid-flight re-plan) and `slots_reused` counts the lane x slot units
+    of already-executed state carried across those re-plans — work a
+    naive plan-from-scratch loop would have recomputed and the resumable
+    executor did not.
     Counters accumulate per process — pass `scan_stats(reset=True)`
     (or call `reset_scan_stats()`) to zero them between measurements.
     """
@@ -135,6 +140,8 @@ class ScanStats:
     grouped_lanes: int = 0        # lane x chunk units in coupled groups
     plan_hits: int = 0            # per-case compile cache hits
     plan_misses: int = 0
+    replans: int = 0              # replace_tables calls (mid-flight re-plans)
+    slots_reused: int = 0         # lane x slot units carried across re-plans
     requests_seen: int = 0        # requests offered to the serving layer
     requests_admitted: int = 0    # ... assigned a service slot
     requests_rejected: int = 0    # ... infeasible at every allowed tier
@@ -177,6 +184,8 @@ def reset_scan_stats() -> None:
     _STATS.grouped_lanes = 0
     _STATS.plan_hits = 0
     _STATS.plan_misses = 0
+    _STATS.replans = 0
+    _STATS.slots_reused = 0
     _STATS.requests_seen = 0
     _STATS.requests_admitted = 0
     _STATS.requests_rejected = 0
@@ -633,6 +642,41 @@ class _ScanState(NamedTuple):
     site_kw_peak: Optional[np.ndarray] = None
 
 
+@dataclasses.dataclass
+class PlanCursor:
+    """Resumable position of one plan execution, paused at a chunk
+    boundary.
+
+    `state` holds full-length (L,) accumulators — finished lanes keep
+    their final values; `t0` is the next global grid slot to scan and
+    `active` the lane indices still unfinished.  A cursor is what
+    `execute_interval` returns and accepts: the MPC loop executes one
+    control interval, re-plans (`replace_tables`), and resumes from the
+    same cursor — no already-executed slot is ever recomputed.
+    Cursors are immutable in practice: `execute_interval` copies the
+    state arrays, so earlier cursors stay valid snapshots.
+    """
+    state: _ScanState
+    t0: int = 0
+    active: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=int))
+
+    @property
+    def done(self) -> bool:
+        """True when every lane has finished its workload."""
+        return self.active.size == 0
+
+
+def new_cursor(plan: SweepPlan) -> PlanCursor:
+    """A fresh cursor at slot 0 with every lane active."""
+    L = plan.n_lanes
+    state = _ScanState(
+        plan.n_scen.copy(), np.zeros(L), np.zeros(L),
+        np.zeros((L, plan.E)), np.zeros(L),
+        np.zeros(L) if plan.coupled else None)
+    return PlanCursor(state=state, t0=0, active=np.arange(L))
+
+
 def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
                  slots_per_hour: int = 1, progress_buckets: int = 32,
                  max_days: int = 120,
@@ -862,6 +906,201 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
         group_sizes=group_sizes, case_group=case_group,
         lane_group=np.asarray(lane_group, dtype=int),
         group_cap_kw=caps, group_office_kw=office)
+
+
+def replace_tables(plan: SweepPlan, cursor: Optional[PlanCursor] = None, *,
+                   schedules=None, carbon=None) -> SweepPlan:
+    """Swap decision tables and/or carbon signals on an in-flight plan.
+
+    The MPC re-plan primitive: given a plan paused at `cursor`, return a
+    new `SweepPlan` whose changed cases carry fresh decision tables (and
+    optionally new carbon signals) while every *unchanged* lane keeps its
+    compiled tables, builders, and incrementally-sampled signal grids —
+    nothing already classified, lowered, or executed is redone.  Resume
+    with `execute_interval(new_plan, cursor)`: the carried state is valid
+    because the lane layout is preserved (enforced below).
+
+    `schedules` is a mapping {case index -> schedule} or a sequence with
+    one entry per case (None = keep); `carbon` is one signal applied to
+    every changed-carbon case or a per-case sequence (None = keep).  A
+    case's ensemble width and lane expansion must not change — an
+    in-flight lane is a scan row with carried state and cannot be split
+    or merged mid-campaign.
+
+    Changed cases are re-classified through the per-case plan cache
+    (`plan_hits`/`plan_misses` account it); `scan_stats().replans` counts
+    each call and `slots_reused` accumulates `cursor.t0 * n_lanes` — the
+    lane x slot units of executed state carried forward instead of
+    recomputed.
+    """
+    n = len(plan.cases)
+    sched_map: Dict[int, object] = {}
+    if schedules is not None:
+        if hasattr(schedules, "items"):
+            sched_map = {int(i): s for i, s in schedules.items()}
+        elif callable(getattr(schedules, "decide", None)) or \
+                callable(getattr(schedules, "decide_grid", None)):
+            if n != 1:
+                raise ValueError(
+                    f"a bare schedule is ambiguous for a {n}-case plan; "
+                    "pass a mapping {case index: schedule} or a per-case "
+                    "sequence")
+            sched_map = {0: schedules}
+        else:
+            seq = list(schedules)
+            if len(seq) != n:
+                raise ValueError(
+                    f"schedules sequence needs one entry per case ({n}), "
+                    f"got {len(seq)}")
+            sched_map = {i: s for i, s in enumerate(seq) if s is not None}
+    carbon_map: Dict[int, object] = {}
+    if carbon is not None:
+        if isinstance(carbon, (list, tuple)) and not callable(
+                getattr(carbon, "at", None)):
+            if len(carbon) != n:
+                raise ValueError(
+                    f"carbon sequence needs one entry per case ({n}), "
+                    f"got {len(carbon)}")
+            carbon_map = {i: c for i, c in enumerate(carbon)
+                          if c is not None}
+        else:
+            carbon_map = {i: carbon for i in range(n)}
+    for i in list(sched_map) + list(carbon_map):
+        if not 0 <= i < n:
+            raise ValueError(f"case index {i} out of range for a "
+                             f"{n}-case plan")
+    changed = sorted(set(sched_map) | set(carbon_map))
+    _STATS.replans += 1
+    if cursor is not None:
+        if len(cursor.state.remaining) != plan.n_lanes:
+            raise ValueError(
+                f"cursor carries {len(cursor.state.remaining)} lanes but "
+                f"the plan has {plan.n_lanes}")
+        _STATS.slots_reused += int(cursor.t0) * plan.n_lanes
+    if not changed:
+        return plan
+
+    H = 24 * plan.sph
+    max_hours = float(plan.max_days) * 24.0
+    new_cases = list(plan.cases)
+    ensembles = list(plan.case_ensemble)
+    lane_table = list(plan.lane_table)
+    lane_builder = list(plan.lane_builder)
+    lane_periodic = plan.lane_periodic.copy()
+    lane_co2 = list(plan.lane_co2_sigs)
+    est_h = plan.est_h
+    memo: dict = {}
+    for i in changed:
+        case = plan.cases[i]
+        lanes = np.flatnonzero(plan.lane_case == i)
+        new_carb = carbon_map.get(i, case.carbon)
+        if i in carbon_map:
+            ens_new = (new_carb if isinstance(new_carb, SignalEnsemble)
+                       else None)
+            old_e = len(ensembles[i]) if ensembles[i] is not None else 1
+            new_e = len(ens_new) if ens_new is not None else 1
+            if (ens_new is None) != (ensembles[i] is None) or old_e != new_e:
+                raise ValueError(
+                    f"case {case.name()!r}: replacing a "
+                    f"{old_e}-member carbon with a {new_e}-member one "
+                    "would change the plan's lane/ensemble layout; "
+                    "re-plans must keep the ensemble width")
+            ensembles[i] = ens_new
+        ens = ensembles[i]
+        new_case = dataclasses.replace(
+            case, schedule=sched_map.get(i, case.schedule), carbon=new_carb)
+        new_cases[i] = new_case
+        sched = as_schedule(new_case.schedule)
+        if ens is not None:
+            dec_sig = carbon_signal(ens.member(0))
+        elif new_case.carbon is not None:
+            dec_sig = carbon_signal(new_case.carbon)
+        else:
+            # default-grid case: keep the plan's existing shared signal
+            dec_sig = lane_co2[int(lanes[0])][0]
+        key = _fingerprint(new_case, plan.price, plan.sph, plan.B,
+                           plan.max_days, memo)
+        comp = _PLAN_CACHE.get(key) if key is not None else None
+        if comp is None:
+            comp = _compile_case(new_case, dec_sig, plan.price, plan.sph,
+                                 plan.B, max_hours)
+            _STATS.plan_misses += 1
+            if key is not None:
+                if len(_PLAN_CACHE) >= _PLAN_CACHE_SIZE:
+                    for old in list(_PLAN_CACHE)[:_PLAN_CACHE_SIZE // 4]:
+                        del _PLAN_CACHE[old]
+                _PLAN_CACHE[key] = comp
+        else:
+            _STATS.plan_hits += 1
+        if comp.stalled:
+            raise RuntimeError(
+                f"case {new_case.name()!r}: the replacement schedule is "
+                "stalled at zero intensity (one full day completes a "
+                "negligible fraction of the workload)")
+        expand = ens is not None and comp.carbon_dep
+        if expand != plan.case_expanded[i]:
+            raise ValueError(
+                f"case {new_case.name()!r}: the replacement schedule "
+                f"{'consults' if expand else 'ignores'} the carbon signal "
+                "under an ensemble, which would "
+                f"{'expand' if expand else 'collapse'} its lanes; "
+                "re-plans must keep the lane layout")
+        est_h = max(est_h, comp.est_h)
+        for lane in lanes:
+            lane = int(lane)
+            e = int(plan.lane_member[lane])
+            if expand:
+                sig_e = carbon_signal(ens.member(e))
+                if comp.periodic:
+                    lane_table[lane] = (
+                        comp.table if comp.prof is not None else
+                        _day_table(new_case, sched, comp.probe, sig_e,
+                                   plan.price, plan.sph, plan.B))
+                    lane_builder[lane] = None
+                else:
+                    lane_table[lane] = None
+                    lane_builder[lane] = _chunk_table_builder(
+                        new_case, sched, comp.probe, sig_e, plan.price,
+                        plan.sph, plan.B)
+                lane_co2[lane] = tuple(carbon_signal(ens.member(e))
+                                       for _ in range(plan.E))
+            else:
+                if comp.periodic:
+                    lane_table[lane] = comp.table
+                    lane_builder[lane] = None
+                else:
+                    lane_table[lane] = None
+                    lane_builder[lane] = _chunk_table_builder(
+                        new_case, sched, comp.probe, dec_sig, plan.price,
+                        plan.sph, plan.B)
+                if ens is not None:
+                    lane_co2[lane] = tuple(carbon_signal(ens.member(e2))
+                                           for e2 in range(plan.E))
+                else:
+                    lane_co2[lane] = tuple(dec_sig
+                                           for _ in range(plan.E))
+            lane_periodic[lane] = comp.periodic
+
+    # restack the periodic tables (cheap NumPy; no classification)
+    L = plan.n_lanes
+    B_t = max((t[0].shape[1] for t in lane_table if t is not None),
+              default=1)
+    tab_u = np.zeros((L, H, B_t))
+    tab_b = np.ones((L, H, B_t))
+    for lane, t in enumerate(lane_table):
+        if t is not None:
+            u_r, b_r = t
+            tab_u[lane] = u_r if u_r.shape[1] == B_t \
+                else np.broadcast_to(u_r, (H, B_t))
+            tab_b[lane] = b_r if b_r.shape[1] == B_t \
+                else np.broadcast_to(b_r, (H, B_t))
+    # grids dict is shared by reference: unchanged signals keep their
+    # incrementally-sampled prefixes, so resuming re-samples nothing
+    return dataclasses.replace(
+        plan, cases=tuple(new_cases), case_ensemble=ensembles,
+        lane_table=lane_table, lane_builder=lane_builder,
+        lane_periodic=lane_periodic, tab_u=tab_u, tab_b=tab_b,
+        tab_buckets=B_t, lane_co2_sigs=lane_co2, est_h=est_h)
 
 
 # ---------------------------------------------------------------------------
@@ -1665,28 +1904,60 @@ def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
                          "'monolithic'")
     if chunk_days is not None and int(chunk_days) < 1:
         raise ValueError(f"chunk_days must be >= 1, got {chunk_days}")
+    if mode == "monolithic":
+        use_jax = _use_jax(backend)
+        n_dev = _resolve_devices(devices, use_jax)
+        pallas_mode = _resolve_pallas(pallas, use_jax)
+        _STATS.precision_mode = plan.precision if use_jax else "fp64"
+        return _execute_monolithic(plan, use_jax, n_dev, pallas_mode)
+
+    return execute_interval(plan, backend=backend, chunk_days=chunk_days,
+                            devices=devices, pallas=pallas).state
+
+
+def execute_interval(plan: SweepPlan, cursor: Optional[PlanCursor] = None, *,
+                     until_slot: Optional[int] = None,
+                     backend: Optional[str] = None,
+                     chunk_days: Optional[int] = None,
+                     devices: Optional[int] = None,
+                     pallas=None) -> PlanCursor:
+    """Advance the chunked scan from `cursor` (a fresh one when None) to
+    `until_slot` (to completion when None) and return the new cursor.
+
+    This is the resumable core of `execute_plan` exposed as a primitive:
+    the MPC loop calls it once per control interval, swaps tables with
+    `replace_tables` in between, and never recomputes an executed slot.
+    The input cursor is not mutated — its state arrays are copied — so
+    callers can keep earlier cursors as snapshots.  Lanes that finish
+    before `until_slot` compact out exactly as in `execute_plan`;
+    stall detection and the `max_days` guard behave identically.
+    """
+    if chunk_days is not None and int(chunk_days) < 1:
+        raise ValueError(f"chunk_days must be >= 1, got {chunk_days}")
     use_jax = _use_jax(backend)
     n_dev = _resolve_devices(devices, use_jax)
     pallas_mode = _resolve_pallas(pallas, use_jax)
     _STATS.precision_mode = plan.precision if use_jax else "fp64"
     H = 24 * plan.sph
-    L = plan.n_lanes
     max_slots = plan.max_slots
-    if mode == "monolithic":
-        return _execute_monolithic(plan, use_jax, n_dev, pallas_mode)
-
+    if cursor is None:
+        cursor = new_cursor(plan)
+    stop = max_slots if until_slot is None else min(int(until_slot),
+                                                   max_slots)
     C = int(chunk_days or DEFAULT_CHUNK_DAYS) * H
     coupled = plan.coupled
-    remaining = plan.n_scen.copy()
-    rt = np.zeros(L)
-    kwh = np.zeros(L)
-    co2 = np.zeros((L, plan.E))
-    cost = np.zeros(L)
-    speak = np.zeros(L) if coupled else None
-    active = np.arange(L)
-    t0 = 0
-    while active.size:
-        C_eff = min(C, max_slots - t0)
+    st = cursor.state
+    remaining = st.remaining.copy()
+    rt = st.runtime_s.copy()
+    kwh = st.kwh.copy()
+    co2 = st.co2.copy()
+    cost = st.cost.copy()
+    speak = st.site_kw_peak.copy() if st.site_kw_peak is not None else (
+        np.zeros(plan.n_lanes) if coupled else None)
+    active = cursor.active.copy()
+    t0 = int(cursor.t0)
+    while active.size and t0 < stop:
+        C_eff = min(C, stop - t0)
         inputs = _chunk_inputs(plan, active, t0, C_eff)
         state = (remaining[active], rt[active], kwh[active], co2[active],
                  cost[active])
@@ -1722,7 +1993,8 @@ def execute_plan(plan: SweepPlan, *, backend: Optional[str] = None,
                 f"max_days={plan.max_days} on the trace grid (remaining "
                 f"{remaining[worst]:.0f} of {plan.n_scen[worst]:.0f} "
                 "scenarios); its schedule may be stalled at zero intensity")
-    return _ScanState(remaining, rt, kwh, co2, cost, speak)
+    return PlanCursor(state=_ScanState(remaining, rt, kwh, co2, cost, speak),
+                      t0=t0, active=active)
 
 
 def _execute_monolithic(plan: SweepPlan, use_jax: bool, n_dev: int = 1,

@@ -519,6 +519,39 @@ class Fleet:
             cases, site=self.site, objective=objective,
             constraints=constraints, price=self.site.price, **kwargs)
 
+    def run_mpc(self, carbon_trace=None, objective="co2", *,
+                constraints=None, deadlines=None, forecast="oracle",
+                replan_every_h=24.0, backend=None, chunk_days=None,
+                **kwargs):
+        """Run the fleet closed-loop under receding-horizon MPC.
+
+        The M-campaign analogue of `Campaign.run_mpc`: every
+        `replan_every_h` hours (None/inf = open loop) the *unfinished*
+        campaigns' remaining workloads are jointly re-optimized via
+        `optimize_fleet` against a fresh `forecast` of the ground-truth
+        trace (`carbon_trace`, defaulting to the site's carbon),
+        warm-started from the incumbent schedules, and the grouped-lane
+        plan resumes from carried state — already-executed slots are
+        never recomputed.  `deadlines` (scalar or per-campaign, all
+        finite) define the receding horizons.  Remaining keyword
+        arguments configure every `optimize_fleet` solve.
+
+        Returns an `MPCResult` whose `.result` is a `FleetResult`
+        (per-campaign `SimResult`s + site rollup) realized against the
+        truth.
+        """
+        from repro.core.mpc import FleetMPCSession
+        truth = self._carbon(carbon_trace, None)
+        dls = self._deadlines(deadlines)
+        cases = self._cases([c.schedule for c in self.campaigns],
+                            carbon=truth, deadlines=dls, label="mpc")
+        return FleetMPCSession(
+            cases, self.site, truth, objective=objective,
+            constraints=constraints, forecast=forecast,
+            replan_every_h=replan_every_h, price=self.site.price,
+            backend=backend, chunk_days=chunk_days,
+            solver=kwargs).run()
+
     # ------------------------------------------------------------------
     def run(self, assignment=None, *, deadlines=None,
             render: Optional[bool] = None) -> FleetResult:

@@ -329,6 +329,59 @@ class Campaign:
             fill_deltas([out.result] + out.frontier, self.baseline())
         return out
 
+    def run_mpc(self, carbon_trace=None, objective="co2", *,
+                constraints=None, deadline_h: float = 0.0,
+                forecast="oracle", replan_every_h=24.0,
+                backend=None, chunk_days=None, **kwargs):
+        """Run this campaign closed-loop under receding-horizon MPC.
+
+        `carbon_trace` is the *ground truth* the campaign executes
+        against (an hourly trace or Signal; defaults to the campaign's
+        own carbon when that is a trace).  `forecast` names what the
+        optimizer *sees* — ``"oracle"`` / ``"day_ahead"`` /
+        ``"persistence"``, or any `repro.core.signal.ForecastModel` —
+        and every `replan_every_h` hours (None/inf = open loop) the
+        remaining horizon is re-optimized from the carried executor
+        state, warm-started from the incumbent schedule's intensity
+        table.  A finite runtime cap is required (`deadline_h` or
+        `constraints={"runtime_h": ...}`): the receding horizon is
+        defined relative to it.  Remaining keyword arguments configure
+        every `optimize_schedule` solve (method, candidates, iterations,
+        seed, ...).
+
+        Returns an `MPCResult` — realized vs planned CO2/energy,
+        per-re-plan solve stats, and the realized forecast error (see
+        docs/OPTIMIZER.md, "Receding-horizon MPC").
+        """
+        from repro.core.mpc import MPCSession
+        from repro.core.optimize import canonical_metric
+        wl, m = self.calibrated()
+        truth = (as_trace(carbon_trace, name="carbon-trace")
+                 if carbon_trace is not None else self.carbon)
+        constraints = {canonical_metric(k): float(v)
+                       for k, v in dict(constraints or {}).items()}
+        if deadline_h:
+            constraints.setdefault("runtime_h", float(deadline_h))
+        case = SweepCase(self.schedule, wl, m, self.bands, truth,
+                         self.start_hour,
+                         deadline_h=float(constraints.get("runtime_h", 0.0)))
+        solver = dict(kwargs)
+        if "init" not in solver:
+            from repro.core.engine import (case_slots_per_hour,
+                                           periodic_decision_profile)
+            from repro.core.schedule import ParametricSchedule
+            prof = periodic_decision_profile(self.schedule, self.bands,
+                                             case_slots_per_hour(case))
+            if prof is not None:
+                solver["init"] = prof[0]
+            elif isinstance(self.schedule, ParametricSchedule):
+                solver["init"] = self.schedule.intensity_table()
+        return MPCSession(case, truth, objective=objective,
+                          constraints=constraints, forecast=forecast,
+                          replan_every_h=replan_every_h, price=self.price,
+                          backend=backend, chunk_days=chunk_days,
+                          solver=solver).run()
+
     # ------------------------------------------------------------------
     def as_fleet(self, site=None, **kwargs):
         """This campaign as an M=1 `Fleet` (the degenerate special case:

@@ -110,19 +110,31 @@ class TraceSignal:
     grid-carbon or forecast trace).
 
     `values[i]` covers absolute hours `[start_hour + i, start_hour + i + 1)`
-    where hour 0 is midnight of the campaign's first day.  Outside the
-    covered range the trace clamps (holds its first/last value), so a
-    campaign that outruns its forecast keeps the most recent sample rather
-    than wrapping to stale data.  `period_h` is None: sweeps over a
-    TraceSignal are routed to the trace-grid engine.
+    where hour 0 is midnight of the campaign's first day.  `period_h` is
+    None: sweeps over a TraceSignal are routed to the trace-grid engine.
+
+    `pad` makes the out-of-range policy explicit instead of incidental:
+
+    - ``"hold"`` (default): outside the covered range the trace clamps
+      (holds its first/last value), so a campaign that outruns its
+      forecast keeps the most recent sample rather than wrapping to
+      stale data.
+    - ``"raise"``: sampling outside ``[start_hour, end_hour)`` raises
+      ``ValueError``.  Use this when silently repeating the archive's
+      last value would corrupt a result — e.g. an MPC horizon that
+      extends past the end of a ground-truth trace.
     """
     values: Tuple[float, ...]
     start_hour: float = 0.0
     name: str = "trace"
+    pad: str = "hold"
 
     def __post_init__(self):
         if len(self.values) < 1:
             raise ValueError("TraceSignal needs at least one value")
+        if self.pad not in ("hold", "raise"):
+            raise ValueError(
+                f"pad must be 'hold' or 'raise', got {self.pad!r}")
         # frozen dataclass: stash the array form once (sample() is hot in
         # large sweeps and must not re-convert the tuple per case)
         object.__setattr__(self, "_arr",
@@ -137,14 +149,36 @@ class TraceSignal:
         """Length of the covered range in hours."""
         return float(len(self.values))
 
+    @property
+    def end_hour(self) -> float:
+        """First absolute hour past the covered range."""
+        return self.start_hour + len(self.values)
+
+    def covers(self, hour: float) -> bool:
+        """True when `hour` falls inside the covered range."""
+        return self.start_hour <= hour < self.end_hour
+
+    def _check_range(self, lo: float, hi: float) -> None:
+        if lo < self.start_hour or hi >= self.end_hour:
+            raise ValueError(
+                f"trace '{self.name}' covers hours [{self.start_hour}, "
+                f"{self.end_hour}) but was sampled at hour "
+                f"{lo if lo < self.start_hour else hi}; extend the "
+                "archive, shorten the horizon, or use pad='hold' to "
+                "clamp explicitly")
+
     def at(self, hour: float) -> float:
+        if self.pad == "raise":
+            self._check_range(hour, hour)
         i = math.floor(hour - self.start_hour)
         return self.values[min(max(i, 0), len(self.values) - 1)]
 
     def sample(self, hours) -> np.ndarray:
         """Vectorized `at` over an array of absolute hours."""
-        idx = np.clip(np.floor(np.asarray(hours, dtype=float)
-                               - self.start_hour).astype(int),
+        hours = np.asarray(hours, dtype=float)
+        if self.pad == "raise" and hours.size:
+            self._check_range(float(hours.min()), float(hours.max()))
+        idx = np.clip(np.floor(hours - self.start_hour).astype(int),
                       0, len(self.values) - 1)
         return self._arr[idx]
 
@@ -239,14 +273,17 @@ def as_ensemble(value, name: str = "ensemble") -> SignalEnsemble:
 
 def trace_windows(values, window_h: int, stride_h: Optional[int] = None,
                   start_hour: float = 0.0,
-                  name: str = "windows") -> SignalEnsemble:
+                  name: str = "windows", pad: str = "hold") -> SignalEnsemble:
     """Slice one long hourly series into an ensemble of sliding windows.
 
     The standard way to build a scenario ensemble from a historical
     grid-carbon archive: every `stride_h` (default `window_h`, i.e.
     non-overlapping) a `window_h`-hour window becomes one member, each
     re-anchored to `start_hour` so all members cover the same campaign
-    hours.  Raises if the series is shorter than one window.
+    hours.  Raises if the series is shorter than one window.  `pad` is
+    forwarded to every member `TraceSignal` — pass ``"raise"`` to make
+    sampling past a window's end an error instead of a silent clamp
+    (see `TraceSignal.pad`).
     """
     arr = np.asarray(list(values), dtype=float).ravel()
     window_h = int(window_h)
@@ -261,7 +298,7 @@ def trace_windows(values, window_h: int, stride_h: Optional[int] = None,
         members.append(TraceSignal(tuple(float(v)
                                          for v in arr[o:o + window_h]),
                                    start_hour=start_hour,
-                                   name=f"{name}[{e}]"))
+                                   name=f"{name}[{e}]", pad=pad))
     return SignalEnsemble(tuple(members), name=name)
 
 
@@ -386,3 +423,173 @@ class SignalSet:
 def default_signals(bands, carbon, price: Optional[Signal] = None) -> SignalSet:
     return SignalSet(background=background_signal(bands),
                      carbon=carbon_signal(carbon), price=price)
+
+
+# ---------------------------------------------------------------------------
+# Forecast-error models (receding-horizon MPC substrate).
+#
+# An MPC re-plan at hour `now_h` does not see the ground-truth trace; it
+# sees a *forecast* of the remaining horizon.  A ForecastModel turns the
+# ground truth into that per-re-plan view — seeded and stateless, so the
+# same (truth, now_h, horizon_h) always yields the same forecast and a
+# re-run of an MPC session is bit-reproducible.  The three bundled models
+# bracket the forecast-quality axis from the West et al. carbon-shifting
+# studies (arXiv:2503.13705, arXiv:2508.14625): `oracle` (perfect
+# foresight — the open-loop upper bound), `day_ahead` (truth plus seeded
+# multiplicative noise and optional bias), and `persistence` (yesterday's
+# realized values repeated forward — the no-forecast baseline).
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ForecastModel(Protocol):
+    """Turns a ground-truth trace into a forecast of the remaining horizon."""
+
+    name: str
+
+    def forecast(self, truth, now_h: float, horizon_h: float) -> SignalEnsemble:
+        """Forecast the window `[now_h, now_h + horizon_h]` of `truth`.
+
+        Returns a `SignalEnsemble` (E >= 1 members) covering at least the
+        requested window on the hourly grid.  Values at hours `<= now_h`
+        are *observed* and must equal the realized truth; stochastic
+        models must be deterministic in `(truth, now_h, horizon_h)` and
+        their own seed.
+        """
+        ...
+
+
+def _forecast_grid(truth, now_h: float, horizon_h: float):
+    """The hourly grid a forecast is built on: integral hours from
+    `floor(now_h)` through `now_h + horizon_h` (so the re-plan's sample
+    grid, which is anchored at `floor(now_h)`, is fully covered)."""
+    if horizon_h < 0:
+        raise ValueError(f"horizon_h must be >= 0, got {horizon_h}")
+    h0 = math.floor(now_h)
+    n = max(1, math.ceil(now_h + horizon_h) - h0)
+    return h0, np.arange(h0, h0 + n, dtype=float)
+
+
+@dataclasses.dataclass(frozen=True)
+class OracleForecast:
+    """Perfect foresight: the forecast *is* the ground truth.
+
+    The truth signal itself is returned as the single ensemble member
+    (not a resampled copy), so an oracle-driven re-plan sees bitwise the
+    same signal object as an open-loop optimize against the truth.
+    """
+    name: str = "oracle"
+
+    def forecast(self, truth, now_h: float, horizon_h: float) -> SignalEnsemble:
+        _forecast_grid(truth, now_h, horizon_h)   # validates horizon
+        return SignalEnsemble((as_trace(truth),), name="oracle")
+
+
+@dataclasses.dataclass(frozen=True)
+class PersistenceForecast:
+    """No-forecast baseline: the last observed period repeated forward.
+
+    Future hours take the value realized exactly `lookback_h` (default 24,
+    i.e. "same hour yesterday") before — iterated, so hour `now + 30`
+    uses `now + 30 - 48` when a single lookback would still be in the
+    future.  At the current hour the forecast equals the realized value
+    (horizon-0 invariant), since only already-observed data is consulted.
+    """
+    lookback_h: float = 24.0
+    name: str = "persistence"
+
+    def __post_init__(self):
+        if self.lookback_h <= 0:
+            raise ValueError("lookback_h must be positive")
+
+    def forecast(self, truth, now_h: float, horizon_h: float) -> SignalEnsemble:
+        truth = as_trace(truth)
+        h0, grid = _forecast_grid(truth, now_h, horizon_h)
+        # Source hour per grid hour: observed hours pass through; future
+        # hours step back whole lookback periods until at or before now.
+        ahead = np.maximum(grid - now_h, 0.0)
+        steps = np.ceil(ahead / self.lookback_h)
+        src = grid - steps * self.lookback_h
+        vals = sample_signal(truth, src)
+        member = TraceSignal(tuple(float(v) for v in vals), start_hour=h0,
+                             name=f"persistence@{now_h:g}h")
+        return SignalEnsemble((member,), name="persistence")
+
+
+@dataclasses.dataclass(frozen=True)
+class DayAheadForecast:
+    """Day-ahead-style forecast: truth plus seeded multiplicative error.
+
+    Each member `m` sees `truth * (1 + bias + noise_sigma * eps)` with
+    `eps ~ N(0, 1)` drawn from a generator seeded by
+    `(seed, m, floor(now_h))` — stateless, so the same re-plan instant
+    always produces the same forecast.  Hours at or before `now_h` are
+    observed and pass through unperturbed.  With `noise_sigma == 0` and
+    `bias == 0` the forecast values equal the oracle's.
+    """
+    noise_sigma: float = 0.1
+    bias: float = 0.0
+    n_members: int = 1
+    seed: int = 0
+    name: str = "day_ahead"
+
+    def __post_init__(self):
+        if self.noise_sigma < 0:
+            raise ValueError("noise_sigma must be >= 0")
+        if self.n_members < 1:
+            raise ValueError("n_members must be >= 1")
+
+    def forecast(self, truth, now_h: float, horizon_h: float) -> SignalEnsemble:
+        truth = as_trace(truth)
+        h0, grid = _forecast_grid(truth, now_h, horizon_h)
+        base = sample_signal(truth, grid)
+        future = grid > now_h
+        members = []
+        for m in range(self.n_members):
+            vals = base.copy()
+            if self.noise_sigma > 0.0 or self.bias != 0.0:
+                rng = np.random.default_rng(
+                    (int(self.seed), int(m), int(math.floor(now_h))))
+                eps = rng.standard_normal(len(grid))
+                factor = 1.0 + self.bias + self.noise_sigma * eps
+                vals = np.where(future, base * factor, base)
+                vals = np.maximum(vals, 1e-9)   # carbon intensity stays > 0
+            members.append(TraceSignal(tuple(float(v) for v in vals),
+                                       start_hour=h0,
+                                       name=f"day_ahead[{m}]@{now_h:g}h"))
+        return SignalEnsemble(tuple(members), name="day_ahead")
+
+
+def oracle() -> OracleForecast:
+    """Perfect-foresight forecast model (open-loop upper bound)."""
+    return OracleForecast()
+
+
+def persistence(lookback_h: float = 24.0) -> PersistenceForecast:
+    """Persistence forecast model (same hour `lookback_h` ago)."""
+    return PersistenceForecast(lookback_h=lookback_h)
+
+
+def day_ahead(noise_sigma: float = 0.1, bias: float = 0.0,
+              n_members: int = 1, seed: int = 0) -> DayAheadForecast:
+    """Day-ahead forecast model (truth + seeded multiplicative error)."""
+    return DayAheadForecast(noise_sigma=noise_sigma, bias=bias,
+                            n_members=n_members, seed=seed)
+
+
+def as_forecast(value) -> ForecastModel:
+    """Coerce to a ForecastModel: pass through anything with a callable
+    `forecast`, or map the names ``"oracle"`` / ``"persistence"`` /
+    ``"day_ahead"`` to default-configured models."""
+    if callable(getattr(value, "forecast", None)):
+        return value
+    if isinstance(value, str):
+        factories = {"oracle": oracle, "persistence": persistence,
+                     "day_ahead": day_ahead}
+        if value in factories:
+            return factories[value]()
+        raise ValueError(
+            f"unknown forecast model {value!r}; expected one of "
+            f"{sorted(factories)} or a ForecastModel instance")
+    raise TypeError(
+        f"cannot interpret {type(value).__name__} as a ForecastModel; "
+        "pass oracle()/persistence()/day_ahead(...) or a name string")

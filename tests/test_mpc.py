@@ -1,0 +1,357 @@
+"""Receding-horizon MPC tests (the ISSUE-8 acceptance bar):
+
+* value-of-forecast pin: on the calibrated OEM case 1 workload (scaled
+  1/8 so the suite stays fast), realized CO2 is monotone in forecast
+  quality — oracle <= day_ahead(sigma) <= persistence within a 2%
+  tolerance band, and oracle strictly beats persistence with no
+  tolerance at all (fixed seeds throughout);
+* K=infinity degenerates to plain open-loop `optimize_schedule`,
+  bitwise: same schedule table, same realized CO2/energy/runtime, zero
+  `replans`/`slots_reused` on the scan counters;
+* zero-recompute pin: every mid-flight re-plan resumes from carried
+  state — `scan_stats().slots_reused` equals the lane-slots carried
+  across re-plans exactly, and no executed slot is ever re-scanned;
+* forecast-model invariants as hypothesis properties (persistence at
+  horizon 0 equals the realized trace; day_ahead with sigma=0, bias=0
+  is the oracle bitwise; day_ahead is seed-deterministic);
+* trace pad policy: the old silent clamp past the archive end is now an
+  explicit `pad="hold"` default with an opt-in `pad="raise"`, and MPC
+  refuses a truth trace that cannot cover the campaign window.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Campaign, Fleet, MachineProfile, Site, SweepCase,
+                        TraceSignal, as_trace, calibrate_workload,
+                        constant_schedule, day_ahead, oracle, persistence,
+                        sample_signal, trace_windows)
+from repro.core.engine_jax import (compile_plan, execute_interval,
+                                   execute_plan, replace_tables,
+                                   reset_scan_stats, scan_stats)
+from repro.core.mpc import MPCSession
+from repro.core.signal import DayAheadForecast, as_forecast
+from repro.core.workload import OEM_CASE_1
+
+SOLVER = dict(method="cem", candidates=24, iterations=4, seed=0)
+
+
+def _truth(days: int = 14, seed: int = 11) -> TraceSignal:
+    """A non-periodic ground-truth carbon trace with day-to-day regime
+    drift: diurnal swing whose amplitude and phase wander across days,
+    plus seeded noise.  Persistence (yesterday again) and a noisy
+    day-ahead forecast both err against it, the oracle does not."""
+    rng = np.random.default_rng(seed)
+    h = np.arange(24 * days, dtype=float)
+    day = h // 24
+    amp = 0.18 + 0.10 * np.sin(day * 2.1) + 0.03 * rng.standard_normal(
+        24 * days)
+    phase = 0.8 * np.sin(day * 0.9)
+    vals = 0.40 + amp * np.sin((h % 24) * 2 * np.pi / 24 + phase)
+    vals += 0.02 * rng.standard_normal(24 * days)
+    return as_trace(vals.clip(0.05), start_hour=0.0, name="truth")
+
+
+@pytest.fixture(scope="module")
+def oem_small():
+    """OEM case 1, calibrated, scaled to 1/8 the scenario count (~22 h
+    at full intensity) so three MPC runs with re-plans stay fast."""
+    wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+    return dataclasses.replace(wl, n_scenarios=wl.n_scenarios // 8), m
+
+
+def _mpc_case(oem_small, truth, deadline_h=96.0):
+    wl, m = oem_small
+    return SweepCase(constant_schedule(1.0), wl, m, carbon=truth,
+                     start_hour=9.0, deadline_h=deadline_h)
+
+
+# ---------------------------------------------------------------------------
+# value-of-forecast pin
+
+
+def test_value_of_forecast_ordering():
+    """Realized CO2 is monotone in forecast quality on OEM case 1
+    (scaled 1/4: ~45 h of work against a 96 h deadline, so *when* the
+    work runs decides the emissions and a stale forecast costs real CO2
+    — measured gap oracle -> persistence is ~13% at these seeds).
+
+    Tolerance: the two inequalities that involve the stochastic
+    day-ahead forecast hold within 2% of the oracle's realized CO2
+    (small solver budgets make individual solves noisy; measured
+    day_ahead-vs-oracle gap is +0.3%); the oracle-vs-persistence
+    ordering must be strict with no tolerance at all.  All seeds fixed:
+    truth seed 11, solver seed 0, forecast seed 0.
+    """
+    wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+    wl = dataclasses.replace(wl, n_scenarios=wl.n_scenarios // 4)
+    truth = _truth()
+    solver = dict(method="cem", candidates=32, iterations=6, seed=0)
+    realized = {}
+    for name, model in [("oracle", oracle()),
+                        ("day_ahead", day_ahead(noise_sigma=0.35, seed=0)),
+                        ("persistence", persistence())]:
+        case = SweepCase(constant_schedule(1.0), wl, m, carbon=truth,
+                         start_hour=9.0, deadline_h=96.0)
+        sess = MPCSession(case, truth, constraints={"runtime_h": 96.0},
+                          forecast=model, replan_every_h=24.0,
+                          solver=solver)
+        out = sess.run()
+        realized[name] = out.realized_co2_kg
+        assert out.realized_runtime_h <= 96.0 + 1e-6
+    tol = 0.02 * realized["oracle"]
+    assert realized["oracle"] <= realized["day_ahead"] + tol, realized
+    assert realized["day_ahead"] <= realized["persistence"] + tol, realized
+    assert realized["oracle"] < realized["persistence"], realized
+
+
+def test_oracle_forecast_mae_is_zero(oem_small):
+    truth = _truth()
+    out = MPCSession(_mpc_case(oem_small, truth),
+                     truth, constraints={"runtime_h": 96.0},
+                     forecast="oracle", replan_every_h=24.0,
+                     solver=SOLVER).run()
+    assert out.forecast_mae == 0.0
+    assert all(r.forecast_mae == 0.0 for r in out.replans)
+    # under the oracle, solve-0's plan and reality agree on the plan's
+    # own horizon; realized may differ (re-plans act on realized
+    # progress) but must not be wildly off the open-loop prediction
+    assert out.realized_co2_kg <= out.planned_co2_kg * 1.05
+
+
+# ---------------------------------------------------------------------------
+# K = infinity degenerates to plain open-loop optimize, bitwise
+
+
+@pytest.mark.parametrize("k_inf", [None, math.inf])
+def test_k_inf_matches_open_loop_bitwise(oem_small, k_inf):
+    from repro.core.optimize import optimize_schedule
+    truth = _truth()
+    case = _mpc_case(oem_small, truth)
+    reset_scan_stats()
+    out = MPCSession(case, truth, constraints={"runtime_h": 96.0},
+                     forecast="oracle", replan_every_h=k_inf,
+                     solver=SOLVER).run()
+    st_mpc = scan_stats(reset=True)
+    ref = optimize_schedule(case, "co2", {"runtime_h": 96.0}, **SOLVER)
+    # same solve -> same schedule table, bit for bit
+    assert np.array_equal(out.schedule.intensity_table(),
+                          ref.schedule.intensity_table())
+    # same executed slots -> identical realized outcome, no tolerance
+    assert out.realized_co2_kg == ref.result.co2_kg
+    assert out.realized_energy_kwh == ref.result.energy_kwh
+    assert out.realized_runtime_h == ref.result.runtime_h
+    # open loop: exactly one solve, no table swap, nothing carried
+    assert out.n_replans == 0
+    assert out.slots_reused == 0
+    assert st_mpc.replans == 0
+    assert st_mpc.slots_reused == 0
+
+
+# ---------------------------------------------------------------------------
+# zero-recompute pin via the new scan counters
+
+
+def test_replan_reuses_every_executed_slot(oem_small):
+    truth = _truth()
+    case = _mpc_case(oem_small, truth)
+    reset_scan_stats()
+    out = MPCSession(case, truth, constraints={"runtime_h": 96.0},
+                     forecast="persistence", replan_every_h=8.0,
+                     solver=SOLVER).run()
+    stats = scan_stats(reset=True)
+    assert out.n_replans >= 2            # ~25 h campaign, 8 h intervals
+    # one replace_tables per mid-flight re-plan, none extra
+    assert stats.replans == out.n_replans
+    # every slot executed before a re-plan is carried, never re-scanned:
+    # the engine counter and the per-record carry agree exactly
+    carried = [r.slots_carried for r in out.replans]
+    assert carried[0] == 0               # entry 0 is the initial solve
+    assert all(c > 0 for c in carried[1:])
+    assert carried[1:] == sorted(carried[1:])    # cursor only advances
+    assert stats.slots_reused == sum(carried[1:])
+    assert out.slots_reused == stats.slots_reused
+
+
+def test_execute_interval_split_is_bitwise(oem_small):
+    """Engine-level pin under the MPC loop: pausing/resuming at an
+    arbitrary slot boundary is invisible in the final state."""
+    wl, m = oem_small
+    truth = _truth()
+    case = SweepCase(constant_schedule(0.7), wl, m, carbon=truth,
+                     start_hour=9.0, deadline_h=96.0)
+    plan = compile_plan([case])
+    ref = execute_plan(plan)
+    cur = execute_interval(plan, until_slot=17)
+    assert not cur.done and cur.t0 == 17
+    cur = execute_interval(plan, cur, until_slot=40)
+    cur = execute_interval(plan, cur)
+    assert cur.done
+    for a, b in zip(ref, cur.state):
+        if a is None:
+            assert b is None
+        else:
+            np.testing.assert_array_equal(a, b)
+
+
+def test_replace_tables_identity_swap_is_noop(oem_small):
+    """Swapping in the very same schedule/carbon mid-flight must not
+    change the outcome — only the counters move."""
+    wl, m = oem_small
+    truth = _truth()
+    case = SweepCase(constant_schedule(0.7), wl, m, carbon=truth,
+                     start_hour=9.0, deadline_h=96.0)
+    plan = compile_plan([case])
+    ref = execute_plan(plan)
+    reset_scan_stats()
+    cur = execute_interval(plan, until_slot=24)
+    plan2 = replace_tables(plan, cur, schedules={0: case.schedule},
+                           carbon=truth)
+    cur = execute_interval(plan2, cur)
+    stats = scan_stats(reset=True)
+    assert stats.replans == 1
+    assert stats.slots_reused == 24 * plan.n_lanes
+    for a, b in zip(ref, cur.state):
+        if a is None:
+            assert b is None
+        else:
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# fleet MPC
+
+
+def test_fleet_run_mpc_smoke(oem_small):
+    wl, m = oem_small
+    truth = _truth()
+    small = dataclasses.replace(wl, n_scenarios=wl.n_scenarios // 2)
+    f = Fleet([Campaign(wl, machine=m, carbon=truth),
+               Campaign(small, machine=m, carbon=truth)],
+              Site(power_cap_kw=1.5, office_kw=0.2, carbon=truth))
+    out = f.run_mpc(truth, deadlines=96.0, forecast="persistence",
+                    replan_every_h=48.0, method="cem", candidates=12,
+                    iterations=2, seed=0)
+    assert out.n_replans >= 1
+    assert len(out.result.campaigns) == 2
+    assert out.result.site.peak_kw is not None
+    assert out.result.site.peak_kw <= 1.5 + 1e-9
+    assert out.realized_co2_kg == pytest.approx(out.result.site.co2_kg)
+    assert all(r.runtime_h > 0 for r in out.result.campaigns)
+
+
+# ---------------------------------------------------------------------------
+# ForecastModel invariants (hypothesis)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.0, 24 * 9.0), st.integers(0, 2**31 - 1))
+def test_persistence_horizon_zero_equals_realized(now_h, seed):
+    """At horizon 0 there is nothing to predict: the persistence view of
+    the (floor-aligned) current hour equals the realized trace."""
+    truth = _truth(days=10, seed=seed % 1000)
+    fc = persistence().forecast(truth, now_h, 0.0)
+    h0 = math.floor(now_h)
+    hours = np.array([h0], dtype=float)
+    np.testing.assert_array_equal(sample_signal(fc.member(0), hours),
+                                  sample_signal(truth, hours))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.0, 24 * 6.0), st.floats(1.0, 96.0),
+       st.integers(0, 2**31 - 1))
+def test_day_ahead_sigma_zero_is_oracle(now_h, horizon_h, seed):
+    truth = _truth(days=11, seed=3)
+    fc = DayAheadForecast(noise_sigma=0.0, bias=0.0, seed=seed)
+    got = fc.forecast(truth, now_h, horizon_h)
+    want = oracle().forecast(truth, now_h, horizon_h)
+    hours = np.arange(math.floor(now_h),
+                      math.ceil(now_h + horizon_h), dtype=float)
+    np.testing.assert_array_equal(sample_signal(got.member(0), hours),
+                                  sample_signal(want.member(0), hours))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.0, 24 * 6.0), st.floats(1.0, 96.0),
+       st.integers(0, 2**16), st.floats(0.01, 0.5))
+def test_day_ahead_is_seed_deterministic(now_h, horizon_h, seed, sigma):
+    truth = _truth(days=11, seed=5)
+    hours = np.arange(math.floor(now_h),
+                      math.ceil(now_h + horizon_h), dtype=float)
+    a = DayAheadForecast(noise_sigma=sigma, seed=seed).forecast(
+        truth, now_h, horizon_h)
+    b = DayAheadForecast(noise_sigma=sigma, seed=seed).forecast(
+        truth, now_h, horizon_h)
+    np.testing.assert_array_equal(sample_signal(a.member(0), hours),
+                                  sample_signal(b.member(0), hours))
+    # ... and past hours are never perturbed (forecasts rewrite the
+    # future, not the record)
+    past = hours[hours <= now_h]
+    if past.size:
+        np.testing.assert_array_equal(sample_signal(a.member(0), past),
+                                      sample_signal(truth, past))
+
+
+def test_as_forecast_names_and_passthrough():
+    assert as_forecast("oracle").name == "oracle"
+    assert as_forecast("persistence").name == "persistence"
+    assert as_forecast("day_ahead").name == "day_ahead"
+    model = day_ahead(noise_sigma=0.2)
+    assert as_forecast(model) is model
+    with pytest.raises(ValueError):
+        as_forecast("nowcast")
+
+
+# ---------------------------------------------------------------------------
+# trace pad policy: the archive-end clamp is explicit now
+
+
+def test_trace_pad_hold_is_default_and_clamps():
+    tr = as_trace([0.1, 0.2, 0.3], start_hour=0.0)
+    assert tr.pad == "hold"
+    assert tr.at(7.0) == 0.3             # clamped to the last value
+    assert tr.at(-3.0) == 0.1
+
+
+def test_trace_pad_raise_rejects_out_of_range():
+    tr = TraceSignal(values=(0.1, 0.2, 0.3), start_hour=0.0, pad="raise")
+    assert tr.at(1.5) == 0.2
+    with pytest.raises(ValueError, match="covers hours"):
+        tr.at(3.0)                        # end_hour is exclusive
+    with pytest.raises(ValueError, match="covers hours"):
+        sample_signal(tr, np.array([1.0, 5.0]))
+    with pytest.raises(ValueError):
+        TraceSignal(values=(0.1,), start_hour=0.0, pad="bogus")
+
+
+def test_trace_windows_forwards_pad():
+    vals = list(np.linspace(0.1, 1.0, 24 * 14))
+    ens = trace_windows(vals, window_h=24 * 7, pad="raise")
+    member = ens.member(0)
+    assert member.pad == "raise"
+    with pytest.raises(ValueError, match="covers hours"):
+        member.at(member.end_hour + 1.0)
+
+
+def test_mpc_rejects_uncovered_truth(oem_small):
+    """MPC executes against realized data; a truth archive shorter than
+    the campaign window would silently fabricate emissions under the
+    hold clamp, so the session refuses it up front."""
+    truth = _truth(days=2)                # 48 h of truth, 96 h deadline
+    case = _mpc_case(oem_small, truth)
+    with pytest.raises(ValueError, match="needs coverage"):
+        MPCSession(case, truth, constraints={"runtime_h": 96.0},
+                   solver=SOLVER)
+
+
+def test_mpc_requires_finite_deadline(oem_small):
+    truth = _truth()
+    case = _mpc_case(oem_small, truth)
+    with pytest.raises(ValueError, match="runtime cap"):
+        MPCSession(case, truth, solver=SOLVER)
+    with pytest.raises(ValueError, match="positive"):
+        MPCSession(case, truth, constraints={"runtime_h": 96.0},
+                   replan_every_h=0.0, solver=SOLVER)
