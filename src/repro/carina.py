@@ -62,6 +62,9 @@ _LAZY = ("trace_sweep", "TraceObjective", "EvalMetrics", "evaluate_params",
          "SweepPlan", "compile_plan", "execute_plan", "summarize_plan",
          "ScanStats", "scan_stats", "reset_scan_stats",
          "PlanCursor", "new_cursor", "execute_interval", "replace_tables",
+         # recurrence: persistent plan cache + incremental delta sweeps
+         "delta_sweep", "DeltaSweepResult", "clear_plan_cache",
+         "plan_cache_info", "PlanCacheInfo", "PlanCache",
          # receding-horizon MPC (drives optimize + the trace engine)
          "MPCSession", "FleetMPCSession", "MPCResult", "ReplanRecord",
          "run_mpc",

@@ -73,6 +73,13 @@ _LAZY = {
     "new_cursor": "repro.core.engine_jax",
     "execute_interval": "repro.core.engine_jax",
     "replace_tables": "repro.core.engine_jax",
+    # recurrence layer: persistent plan cache + incremental delta sweeps
+    "delta_sweep": "repro.core.engine_jax",
+    "DeltaSweepResult": "repro.core.engine_jax",
+    "clear_plan_cache": "repro.core.engine_jax",
+    "plan_cache_info": "repro.core.engine_jax",
+    "PlanCacheInfo": "repro.core.engine_jax",
+    "PlanCache": "repro.core.plancache",
     # MPC loop: drives optimize + engine_jax, so it rides the lazy door
     "MPCSession": "repro.core.mpc",
     "FleetMPCSession": "repro.core.mpc",

@@ -251,7 +251,8 @@ def sweep(cases: Sequence[SweepCase],
           backend: Optional[str] = None,
           max_days: int = 120,
           precision: str = "fp64",
-          devices: Optional[int] = None) -> List[SimResult]:
+          devices: Optional[int] = None,
+          cache_dir: Optional[str] = None) -> List[SimResult]:
     """Evaluate all cases in vectorized passes; order is preserved.
 
     Each case is dispatched to the periodic 24-slot path when its
@@ -267,6 +268,8 @@ def sweep(cases: Sequence[SweepCase],
     knobs `precision` ("fp64" exact / "mixed" fp32 dynamics with fp64
     accumulators) and `devices` (shard_map lane fan-out, None = all
     local devices) — see `engine_jax.compile_plan`/`execute_plan`.
+    `cache_dir` points trace-path compilation at a persistent on-disk
+    plan cache (default: the `CARINA_PLAN_CACHE` env var).
     """
     if not len(cases):
         return []
@@ -300,7 +303,7 @@ def sweep(cases: Sequence[SweepCase],
         res = trace_sweep(sub, price=price, slots_per_hour=sph,
                           progress_buckets=progress_buckets, backend=backend,
                           max_days=max_days, precision=precision,
-                          devices=devices)
+                          devices=devices, cache_dir=cache_dir)
         for i, r in zip(trace_idx, res):
             out[i] = r
     return out  # type: ignore[return-value]

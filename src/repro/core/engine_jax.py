@@ -57,12 +57,13 @@ import dataclasses
 import functools
 import math
 import os
+from collections import OrderedDict
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
                     Sequence, Set, Tuple)
 
 import numpy as np
 
-from repro.core import model
+from repro.core import model, plancache
 from repro.core.carbon import GridCarbonModel
 from repro.core.schedule import SchedulingContext, as_schedule
 from repro.core.signal import (Signal, SignalEnsemble, carbon_signal,
@@ -132,6 +133,13 @@ class ScanStats:
     of already-executed state carried across those re-plans — work a
     naive plan-from-scratch loop would have recomputed and the resumable
     executor did not.
+    Recurrence observability: `disk_hits`/`disk_misses` count per-case
+    compile artifacts served from (or absent from) the persistent plan
+    cache (core/plancache.py; a fresh-process warm start of an S-case
+    sweep shows `disk_hits == S` with `plan_misses == 0` — zero
+    classification/lowering work), and `lanes_recomputed`/
+    `lanes_spliced` partition a `delta_sweep`'s lanes into re-scanned
+    vs result-spliced (a 1-of-S schedule change shows ~1/S recomputed).
     Counters accumulate per process — pass `scan_stats(reset=True)`
     (or call `reset_scan_stats()`) to zero them between measurements.
     """
@@ -142,6 +150,10 @@ class ScanStats:
     plan_misses: int = 0
     replans: int = 0              # replace_tables calls (mid-flight re-plans)
     slots_reused: int = 0         # lane x slot units carried across re-plans
+    disk_hits: int = 0            # compile artifacts loaded from disk
+    disk_misses: int = 0          # disk lookups that fell through to compile
+    lanes_recomputed: int = 0     # delta_sweep lanes re-scanned
+    lanes_spliced: int = 0        # delta_sweep lanes served from prev results
     requests_seen: int = 0        # requests offered to the serving layer
     requests_admitted: int = 0    # ... assigned a service slot
     requests_rejected: int = 0    # ... infeasible at every allowed tier
@@ -186,6 +198,10 @@ def reset_scan_stats() -> None:
     _STATS.plan_misses = 0
     _STATS.replans = 0
     _STATS.slots_reused = 0
+    _STATS.disk_hits = 0
+    _STATS.disk_misses = 0
+    _STATS.lanes_recomputed = 0
+    _STATS.lanes_spliced = 0
     _STATS.requests_seen = 0
     _STATS.requests_admitted = 0
     _STATS.requests_rejected = 0
@@ -433,8 +449,32 @@ def _table_stalled(case, table: Tuple[np.ndarray, np.ndarray],
     return day_scen <= _STALL_FRAC_PER_DAY * case.workload.n_scenarios
 
 
-_PLAN_CACHE: Dict[tuple, _CaseCompiled] = {}
+_PLAN_CACHE: "OrderedDict[tuple, _CaseCompiled]" = OrderedDict()
 _PLAN_CACHE_SIZE = 4096               # entries are ~1 KB (tables + probe)
+
+
+def _memo_get(key: tuple) -> Optional[_CaseCompiled]:
+    """In-memory memo lookup with LRU recency: a hit moves the entry to
+    the young end, so hot entries compiled early survive eviction."""
+    comp = _PLAN_CACHE.get(key)
+    if comp is not None:
+        _PLAN_CACHE.move_to_end(key)
+    return comp
+
+
+def _memo_put(key: tuple, comp: _CaseCompiled) -> None:
+    """Insert at the young end; when full, evict the oldest quarter (in
+    true recency order — `_memo_get` refreshes on hit)."""
+    if key in _PLAN_CACHE:
+        _PLAN_CACHE.move_to_end(key)
+        _PLAN_CACHE[key] = comp
+        return
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_SIZE:
+        for _ in range(max(_PLAN_CACHE_SIZE // 4, 1)):
+            if not _PLAN_CACHE:
+                break
+            _PLAN_CACHE.popitem(last=False)
+    _PLAN_CACHE[key] = comp
 
 
 class _Opaque(Exception):
@@ -509,7 +549,93 @@ def _fingerprint(case, price, sph: int, B: int, max_days: int,
 
 
 def clear_plan_cache() -> None:
+    """Empty the in-process compile memo and zero every cache counter
+    (`plan_hits`/`plan_misses`, the disk `disk_hits`/`disk_misses`, and
+    the delta-sweep `lanes_recomputed`/`lanes_spliced`) so hit-rate
+    measurements restart clean.  Disk entries are left in place — use
+    `plancache.get_cache(dir).clear()` to empty a store."""
     _PLAN_CACHE.clear()
+    _STATS.plan_hits = 0
+    _STATS.plan_misses = 0
+    _STATS.disk_hits = 0
+    _STATS.disk_misses = 0
+    _STATS.lanes_recomputed = 0
+    _STATS.lanes_spliced = 0
+
+
+def _comp_nbytes(comp: _CaseCompiled) -> int:
+    n = 256                               # flags, floats, tuple overhead
+    for pair in (comp.prof, comp.table):
+        if pair is not None:
+            n += int(pair[0].nbytes) + int(pair[1].nbytes)
+    if comp.probe is not None:
+        n += 24 * len(comp.probe.samples)
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCacheInfo:
+    """One dashboard row over both plan-cache layers: the in-process
+    memo (`mem_*`) and the persistent disk store (`disk_*`, zero when
+    caching is off).  `hits`/`misses` aggregate since the last
+    `clear_plan_cache()`/`reset_scan_stats()`: a hit is a compile
+    avoided by either layer, a miss is an actual `_compile_case` run."""
+    mem_entries: int
+    mem_bytes: int
+    disk_entries: int
+    disk_bytes: int
+    hits: int
+    misses: int
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of case lookups served without compiling (0.0 when
+        nothing has been looked up yet)."""
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+def plan_cache_info(cache_dir: Optional[str] = None) -> PlanCacheInfo:
+    """Entries, bytes, and hit rate of the plan cache (memo + disk).
+
+    `cache_dir` resolves like everywhere else (explicit dir, else the
+    ``CARINA_PLAN_CACHE`` env default, else no disk layer)."""
+    cache = plancache.get_cache(cache_dir)
+    disk_entries, disk_bytes = cache.info() if cache is not None else (0, 0)
+    return PlanCacheInfo(
+        mem_entries=len(_PLAN_CACHE),
+        mem_bytes=sum(_comp_nbytes(c) for c in _PLAN_CACHE.values()),
+        disk_entries=disk_entries, disk_bytes=disk_bytes,
+        hits=_STATS.plan_hits + _STATS.disk_hits,
+        misses=_STATS.plan_misses)
+
+
+def _obtain_case(case, dec_sig, price, sph: int, B: int, max_days: int,
+                 max_hours: float, key: Optional[tuple],
+                 cache: Optional[plancache.PlanCache]) -> _CaseCompiled:
+    """One case's compile artifact through the layered cache: in-memory
+    memo, then the disk store, then `_compile_case` (write-through to
+    both layers).  Opaque-fingerprint cases (key None) bypass both
+    layers entirely — no entry is ever stored for them, so a
+    closure-bearing schedule can never poison the cache."""
+    comp = _memo_get(key) if key is not None else None
+    if comp is not None:
+        _STATS.plan_hits += 1
+        return comp
+    if cache is not None and key is not None:
+        comp = cache.get_case(key)
+        if comp is not None:
+            _STATS.disk_hits += 1
+            _memo_put(key, comp)
+            return comp
+        _STATS.disk_misses += 1
+    comp = _compile_case(case, dec_sig, price, sph, B, max_hours)
+    _STATS.plan_misses += 1
+    if key is not None:
+        _memo_put(key, comp)
+        if cache is not None:
+            cache.put_case(key, comp)
+    return comp
 
 
 def _compile_case(case, dec_sig, price, sph: int, B: int,
@@ -683,13 +809,21 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
                  group_sizes: Optional[Sequence[int]] = None,
                  group_caps_kw: Optional[Sequence[Optional[float]]] = None,
                  group_office_kw: Optional[Sequence[float]] = None,
-                 precision: str = "fp64") -> SweepPlan:
+                 precision: str = "fp64",
+                 cache_dir: Optional[str] = None) -> SweepPlan:
     """Lower a case batch into a `SweepPlan` (the scan's input form).
 
     Per-case classification (closed-form profile / probe / decide_grid)
     is memoized by case fingerprint across calls, so re-sweeping the
     same cases — or re-evaluating an optimizer's warm-start loop — skips
-    the Python probing entirely.
+    the Python probing entirely.  `cache_dir` (default: the
+    ``CARINA_PLAN_CACHE`` environment variable; caching off when both
+    are unset) adds the persistent layer: compile artifacts are also
+    served from / written through to a disk-backed content-addressed
+    store (core/plancache.py), so a *fresh process* re-compiling the
+    same batch does zero classification/probing/lowering work — one
+    whole-batch entry read (accounted as `scan_stats().disk_hits`)
+    replaces the S-case compile, bitwise-identically.
 
     `group_sizes` partitions the case sequence into fleet *groups* of
     adjacent cases (the M campaigns of one fleet case); `group_caps_kw`
@@ -780,21 +914,36 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
                       else default_sig)
                 for c, ens in zip(cases, ensembles)]
 
-    compiled: List[_CaseCompiled] = []
+    cache = plancache.get_cache(cache_dir)
     memo: dict = {}
-    for c, sig in zip(cases, dec_sigs):
-        key = _fingerprint(c, price, sph, B, max_days, memo)
-        comp = _PLAN_CACHE.get(key) if key is not None else None
-        if comp is None:
-            comp = _compile_case(c, sig, price, sph, B, max_hours)
-            _STATS.plan_misses += 1
-            if key is not None:
-                if len(_PLAN_CACHE) >= _PLAN_CACHE_SIZE:
-                    for old in list(_PLAN_CACHE)[:_PLAN_CACHE_SIZE // 4]:
-                        del _PLAN_CACHE[old]
-                _PLAN_CACHE[key] = comp
+    keys = [_fingerprint(c, price, sph, B, max_days, memo) for c in cases]
+    compiled: List[Optional[_CaseCompiled]] = [
+        _memo_get(k) if k is not None else None for k in keys]
+    _STATS.plan_hits += sum(c is not None for c in compiled)
+    missing = [i for i, c in enumerate(compiled) if c is None]
+    batch_digest = (cache.batch_digest(keys)
+                    if cache is not None and len(cases)
+                    and all(k is not None for k in keys) else None)
+    batch_missed = False
+    if missing and batch_digest is not None:
+        # whole-batch warm start: one entry read replaces up to S
+        # per-case reads (the common recurrence shape — the same batch,
+        # verbatim, next cycle in a fresh process)
+        batch = cache.get_batch(batch_digest, len(cases))
+        if batch is not None:
+            for i in missing:
+                compiled[i] = batch[i]
+                _memo_put(keys[i], batch[i])
+            _STATS.disk_hits += len(missing)
+            missing = []
         else:
-            _STATS.plan_hits += 1
+            batch_missed = True
+    for i in missing:
+        compiled[i] = _obtain_case(cases[i], dec_sigs[i], price, sph, B,
+                                   max_days, max_hours, keys[i], cache)
+    if batch_missed:
+        cache.put_batch(batch_digest, compiled)
+    for c, comp in zip(cases, compiled):
         if comp.stalled:
             raise RuntimeError(
                 f"case {c.name()!r} can never finish on the trace grid: one "
@@ -802,7 +951,6 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
                 f"of {c.workload.n_scenarios:.0f} scenarios and the "
                 "decision table is day-periodic — the schedule is stalled "
                 "at zero intensity")
-        compiled.append(comp)
 
     # ---- lane layout -----------------------------------------------------
     lane_case: List[int] = []
@@ -908,31 +1056,13 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
         group_cap_kw=caps, group_office_kw=office)
 
 
-def replace_tables(plan: SweepPlan, cursor: Optional[PlanCursor] = None, *,
-                   schedules=None, carbon=None) -> SweepPlan:
-    """Swap decision tables and/or carbon signals on an in-flight plan.
-
-    The MPC re-plan primitive: given a plan paused at `cursor`, return a
-    new `SweepPlan` whose changed cases carry fresh decision tables (and
-    optionally new carbon signals) while every *unchanged* lane keeps its
-    compiled tables, builders, and incrementally-sampled signal grids —
-    nothing already classified, lowered, or executed is redone.  Resume
-    with `execute_interval(new_plan, cursor)`: the carried state is valid
-    because the lane layout is preserved (enforced below).
-
-    `schedules` is a mapping {case index -> schedule} or a sequence with
-    one entry per case (None = keep); `carbon` is one signal applied to
-    every changed-carbon case or a per-case sequence (None = keep).  A
-    case's ensemble width and lane expansion must not change — an
-    in-flight lane is a scan row with carried state and cannot be split
-    or merged mid-campaign.
-
-    Changed cases are re-classified through the per-case plan cache
-    (`plan_hits`/`plan_misses` account it); `scan_stats().replans` counts
-    each call and `slots_reused` accumulates `cursor.t0 * n_lanes` — the
-    lane x slot units of executed state carried forward instead of
-    recomputed.
-    """
+def _normalize_replace_maps(plan: SweepPlan, schedules, carbon
+                            ) -> Tuple[Dict[int, object], Dict[int, object]]:
+    """Normalize `replace_tables`/`delta_sweep` deltas to index maps:
+    `schedules` may be a mapping {case index -> schedule}, a per-case
+    sequence (None = keep), or — for 1-case plans — a bare schedule;
+    `carbon` a mapping {case index -> signal}, one signal applied to
+    every case, or a per-case sequence."""
     n = len(plan.cases)
     sched_map: Dict[int, object] = {}
     if schedules is not None:
@@ -955,7 +1085,10 @@ def replace_tables(plan: SweepPlan, cursor: Optional[PlanCursor] = None, *,
             sched_map = {i: s for i, s in enumerate(seq) if s is not None}
     carbon_map: Dict[int, object] = {}
     if carbon is not None:
-        if isinstance(carbon, (list, tuple)) and not callable(
+        if hasattr(carbon, "items") and not callable(
+                getattr(carbon, "at", None)):
+            carbon_map = {int(i): c for i, c in carbon.items()}
+        elif isinstance(carbon, (list, tuple)) and not callable(
                 getattr(carbon, "at", None)):
             if len(carbon) != n:
                 raise ValueError(
@@ -969,6 +1102,37 @@ def replace_tables(plan: SweepPlan, cursor: Optional[PlanCursor] = None, *,
         if not 0 <= i < n:
             raise ValueError(f"case index {i} out of range for a "
                              f"{n}-case plan")
+    return sched_map, carbon_map
+
+
+def replace_tables(plan: SweepPlan, cursor: Optional[PlanCursor] = None, *,
+                   schedules=None, carbon=None,
+                   cache_dir: Optional[str] = None) -> SweepPlan:
+    """Swap decision tables and/or carbon signals on an in-flight plan.
+
+    The MPC re-plan primitive: given a plan paused at `cursor`, return a
+    new `SweepPlan` whose changed cases carry fresh decision tables (and
+    optionally new carbon signals) while every *unchanged* lane keeps its
+    compiled tables, builders, and incrementally-sampled signal grids —
+    nothing already classified, lowered, or executed is redone.  Resume
+    with `execute_interval(new_plan, cursor)`: the carried state is valid
+    because the lane layout is preserved (enforced below).
+
+    `schedules` is a mapping {case index -> schedule} or a sequence with
+    one entry per case (None = keep); `carbon` is one signal applied to
+    every changed-carbon case or a per-case sequence (None = keep).  A
+    case's ensemble width and lane expansion must not change — an
+    in-flight lane is a scan row with carried state and cannot be split
+    or merged mid-campaign.
+
+    Changed cases are re-classified through the layered plan cache
+    (`plan_hits`/`plan_misses`/`disk_hits` account it; `cache_dir`
+    resolves like `compile_plan`'s); `scan_stats().replans` counts
+    each call and `slots_reused` accumulates `cursor.t0 * n_lanes` — the
+    lane x slot units of executed state carried forward instead of
+    recomputed.
+    """
+    sched_map, carbon_map = _normalize_replace_maps(plan, schedules, carbon)
     changed = sorted(set(sched_map) | set(carbon_map))
     _STATS.replans += 1
     if cursor is not None:
@@ -989,6 +1153,7 @@ def replace_tables(plan: SweepPlan, cursor: Optional[PlanCursor] = None, *,
     lane_periodic = plan.lane_periodic.copy()
     lane_co2 = list(plan.lane_co2_sigs)
     est_h = plan.est_h
+    cache = plancache.get_cache(cache_dir)
     memo: dict = {}
     for i in changed:
         case = plan.cases[i]
@@ -1020,18 +1185,8 @@ def replace_tables(plan: SweepPlan, cursor: Optional[PlanCursor] = None, *,
             dec_sig = lane_co2[int(lanes[0])][0]
         key = _fingerprint(new_case, plan.price, plan.sph, plan.B,
                            plan.max_days, memo)
-        comp = _PLAN_CACHE.get(key) if key is not None else None
-        if comp is None:
-            comp = _compile_case(new_case, dec_sig, plan.price, plan.sph,
-                                 plan.B, max_hours)
-            _STATS.plan_misses += 1
-            if key is not None:
-                if len(_PLAN_CACHE) >= _PLAN_CACHE_SIZE:
-                    for old in list(_PLAN_CACHE)[:_PLAN_CACHE_SIZE // 4]:
-                        del _PLAN_CACHE[old]
-                _PLAN_CACHE[key] = comp
-        else:
-            _STATS.plan_hits += 1
+        comp = _obtain_case(new_case, dec_sig, plan.price, plan.sph,
+                            plan.B, plan.max_days, max_hours, key, cache)
         if comp.stalled:
             raise RuntimeError(
                 f"case {new_case.name()!r}: the replacement schedule is "
@@ -1101,6 +1256,163 @@ def replace_tables(plan: SweepPlan, cursor: Optional[PlanCursor] = None, *,
         lane_table=lane_table, lane_builder=lane_builder,
         lane_periodic=lane_periodic, tab_u=tab_u, tab_b=tab_b,
         tab_buckets=B_t, lane_co2_sigs=lane_co2, est_h=est_h)
+
+
+def _value_changed(old, new) -> bool:
+    """True unless `new` provably carries the same value identity as
+    `old` (same object, or equal `_freeze` fingerprints).  Opaque
+    components (closures) are always treated as changed — correctness
+    over splicing."""
+    if old is new:
+        return False
+    try:
+        return _freeze(old) != _freeze(new)
+    except _Opaque:
+        return True
+
+
+def _subset_plan(plan: SweepPlan, case_idx: Sequence[int]) -> SweepPlan:
+    """A `SweepPlan` over a case subset, sliced — not recompiled — from
+    `plan`: tables, builders, physics scalars, and the incrementally
+    sampled signal `grids` (shared by reference) all carry over, so
+    building the subset does zero classification or lowering work.
+    Coupled groups must be included whole (their lanes interact through
+    the site cap every slot); per-lane scan results are unchanged by
+    the subsetting, exactly as with finished-lane compaction."""
+    idx = np.asarray(sorted(int(i) for i in case_idx), dtype=int)
+    keep = np.zeros(len(plan.cases), dtype=bool)
+    keep[idx] = True
+    for g in sorted({int(plan.case_group[i]) for i in idx}):
+        if np.isfinite(plan.group_cap_kw[g]):
+            members = np.flatnonzero(plan.case_group == g)
+            if not keep[members].all():
+                raise ValueError(
+                    f"coupled group {g} must be subset whole: its lanes "
+                    "share the site cap every slot")
+    case_pos = {int(i): j for j, i in enumerate(idx)}
+    lanes = np.flatnonzero(np.isin(plan.lane_case, idx))
+    old_groups = sorted({int(plan.case_group[i]) for i in idx})
+    gmap = {g: k for k, g in enumerate(old_groups)}
+    ga = np.asarray(old_groups, dtype=int)
+    return dataclasses.replace(
+        plan,
+        cases=tuple(plan.cases[i] for i in idx),
+        case_ensemble=[plan.case_ensemble[i] for i in idx],
+        case_expanded=[plan.case_expanded[i] for i in idx],
+        lane_case=np.array([case_pos[int(c)]
+                            for c in plan.lane_case[lanes]], dtype=int),
+        lane_member=plan.lane_member[lanes],
+        lane_table=[plan.lane_table[int(ln)] for ln in lanes],
+        lane_builder=[plan.lane_builder[int(ln)] for ln in lanes],
+        lane_periodic=plan.lane_periodic[lanes],
+        tab_u=plan.tab_u[lanes], tab_b=plan.tab_b[lanes],
+        lane_co2_sigs=[plan.lane_co2_sigs[int(ln)] for ln in lanes],
+        n_scen=plan.n_scen[lanes], rate=plan.rate[lanes],
+        oh=plan.oh[lanes], idle=plan.idle[lanes], dyn=plan.dyn[lanes],
+        alpha=plan.alpha[lanes], gamma=plan.gamma[lanes],
+        ohfrac=plan.ohfrac[lanes], start=plan.start[lanes],
+        g0=plan.g0[lanes], s0=plan.s0[lanes], bg_day=plan.bg_day[lanes],
+        group_sizes=tuple(
+            int(np.isin(np.flatnonzero(plan.case_group == g), idx).sum())
+            for g in old_groups),
+        case_group=np.array([gmap[int(plan.case_group[i])] for i in idx],
+                            dtype=int),
+        lane_group=np.array([gmap[int(g)] for g in plan.lane_group[lanes]],
+                            dtype=int),
+        group_cap_kw=plan.group_cap_kw[ga],
+        group_office_kw=plan.group_office_kw[ga],
+        grids=plan.grids)
+
+
+@dataclasses.dataclass
+class DeltaSweepResult:
+    """One incremental re-sweep: per-case `SimResult`s for the whole
+    batch (`results`, order preserved), the updated plan to delta
+    against next cycle (`plan`), and the case-index partition into
+    re-scanned (`recomputed`) vs prev-result-spliced (`spliced`)."""
+    results: List[SimResult]
+    plan: SweepPlan
+    recomputed: Tuple[int, ...]
+    spliced: Tuple[int, ...]
+
+
+def delta_sweep(prev_plan: SweepPlan, prev_results: Sequence[SimResult], *,
+                schedules=None, carbon=None,
+                backend: Optional[str] = None,
+                chunk_days: Optional[int] = None,
+                devices: Optional[int] = None, pallas=None,
+                cache_dir: Optional[str] = None) -> DeltaSweepResult:
+    """Re-sweep a recurring batch incrementally: re-scan only the cases
+    a delta actually affects and splice last cycle's `SimResult`s for
+    the rest.
+
+    The recurrence primitive: given last cycle's compiled plan and its
+    results, plus this cycle's delta — `schedules` (mapping {case index
+    -> schedule} or per-case sequence, None = keep) and/or `carbon`
+    (one signal for every case or a per-case sequence) — return the
+    full result list as if the whole batch had been re-swept.  Deltas
+    are screened by value: a "changed" schedule or carbon signal that
+    fingerprints identically to the incumbent is a no-op (its lanes are
+    spliced, not re-scanned).  Changed cases re-lower through
+    `replace_tables` — the ensemble width and lane expansion of every
+    case must be preserved, exactly as for an in-flight re-plan — and
+    re-execute from slot 0 as a fresh cycle on a sliced subplan;
+    results for them are bitwise-identical to a full re-sweep (lanes
+    do not interact across groups, so subsetting is equivalent to the
+    executor's finished-lane compaction).  A changed case inside a
+    site-capped fleet group drags its whole group into the re-scan
+    (coupled lanes share the cap every slot — splicing a member of a
+    changed group would be wrong, not just stale).
+
+    `scan_stats().lanes_recomputed`/`lanes_spliced` account the lane
+    partition; with K changed schedules out of S the re-scanned slot
+    work is ~K/S of a full re-sweep.  `cache_dir` resolves like
+    `compile_plan`'s.  Note a changed *carbon* signal affects every
+    case it applies to even under carbon-blind schedules — the CO2
+    integral runs over the realized trace — so a new carbon window
+    re-scans all of its cases; the savings there come from the plan
+    cache (tables and classification are reused), not from splicing.
+    """
+    prev_results = list(prev_results)
+    n = len(prev_plan.cases)
+    if len(prev_results) != n:
+        raise ValueError(
+            f"prev_results carries {len(prev_results)} results but the "
+            f"plan has {n} cases — pass last cycle's full result list")
+    sched_map, carbon_map = _normalize_replace_maps(prev_plan, schedules,
+                                                    carbon)
+    sched_map = {i: s for i, s in sched_map.items()
+                 if _value_changed(prev_plan.cases[i].schedule, s)}
+    carbon_map = {i: c for i, c in carbon_map.items()
+                  if _value_changed(prev_plan.cases[i].carbon, c)}
+    new_plan = replace_tables(prev_plan, None,
+                              schedules=sched_map or None,
+                              carbon=carbon_map or None,
+                              cache_dir=cache_dir)
+    affected = set(sched_map) | set(carbon_map)
+    # lane-group revalidation: a changed member of a site-capped group
+    # invalidates the whole group's scan, not just its own lane
+    for g in sorted({int(new_plan.case_group[i]) for i in affected}):
+        if np.isfinite(new_plan.group_cap_kw[g]):
+            affected.update(
+                int(i) for i in np.flatnonzero(new_plan.case_group == g))
+    if not affected:
+        _STATS.lanes_spliced += new_plan.n_lanes
+        return DeltaSweepResult(results=prev_results, plan=new_plan,
+                                recomputed=(), spliced=tuple(range(n)))
+    sub = sorted(affected)
+    subplan = _subset_plan(new_plan, sub)
+    _STATS.lanes_recomputed += subplan.n_lanes
+    _STATS.lanes_spliced += new_plan.n_lanes - subplan.n_lanes
+    state = execute_plan(subplan, backend=backend, chunk_days=chunk_days,
+                         devices=devices, pallas=pallas)
+    sub_results = summarize_plan(subplan, state)
+    results = prev_results
+    for j, i in enumerate(sub):
+        results[i] = sub_results[j]
+    return DeltaSweepResult(
+        results=results, plan=new_plan, recomputed=tuple(sub),
+        spliced=tuple(i for i in range(n) if i not in affected))
 
 
 # ---------------------------------------------------------------------------
@@ -2608,7 +2920,8 @@ def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
                 group_office_kw: Optional[Sequence[float]] = None,
                 precision: str = "fp64",
                 devices: Optional[int] = None,
-                pallas=None) -> List[SimResult]:
+                pallas=None,
+                cache_dir: Optional[str] = None) -> List[SimResult]:
     """Evaluate cases on the trace grid; order is preserved.
 
     Compile -> execute -> summarize: the case batch is lowered into a
@@ -2635,6 +2948,8 @@ def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
     Scale-out knobs: `precision` is the plan dtype policy (see
     `compile_plan`), `devices` the `shard_map` lane fan-out and
     `pallas` the coupled-kernel dispatch policy (see `execute_plan`).
+    `cache_dir` points compilation at a persistent on-disk plan cache
+    (default: the `CARINA_PLAN_CACHE` env var; see `core.plancache`).
     """
     if not len(cases):
         return []
@@ -2642,7 +2957,7 @@ def trace_sweep(cases: Sequence, price: Optional[Signal] = None, *,
                         progress_buckets=progress_buckets, max_days=max_days,
                         group_sizes=group_sizes, group_caps_kw=group_caps_kw,
                         group_office_kw=group_office_kw,
-                        precision=precision)
+                        precision=precision, cache_dir=cache_dir)
     state = execute_plan(plan, backend=backend, chunk_days=chunk_days,
                          mode=mode, devices=devices, pallas=pallas)
     return summarize_plan(plan, state)

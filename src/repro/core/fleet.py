@@ -143,7 +143,8 @@ def fleet_sweep(fleet_cases: Sequence[Sequence[SweepCase]],
                 chunk_days: Optional[int] = None,
                 precision: str = "fp64",
                 devices: Optional[int] = None,
-                pallas=None) -> List[FleetResult]:
+                pallas=None,
+                cache_dir: Optional[str] = None) -> List[FleetResult]:
     """Evaluate fleet cases (each a group of M member `SweepCase`s) on
     the grouped-lane trace engine; order is preserved.
 
@@ -156,6 +157,8 @@ def fleet_sweep(fleet_cases: Sequence[Sequence[SweepCase]],
     (dtype policy, shard_map lane fan-out, coupled-kernel dispatch —
     see `engine_jax.compile_plan` and `execute_plan`); coupled sweeps
     shard at group boundaries so the site cap stays device-local.
+    `cache_dir` points plan compilation at a persistent on-disk cache
+    (default: the `CARINA_PLAN_CACHE` env var; see `core.plancache`).
     """
     if not len(fleet_cases):
         return []
@@ -166,7 +169,8 @@ def fleet_sweep(fleet_cases: Sequence[Sequence[SweepCase]],
     if site.power_cap_kw is None:
         res = sweep(flat, price=price, progress_buckets=progress_buckets,
                     backend=backend, max_days=max_days,
-                    precision=precision, devices=devices)
+                    precision=precision, devices=devices,
+                    cache_dir=cache_dir)
         out = []
         i = 0
         for name, M in zip(names, sizes):
@@ -187,7 +191,7 @@ def fleet_sweep(fleet_cases: Sequence[Sequence[SweepCase]],
                         group_sizes=sizes,
                         group_caps_kw=[site.power_cap_kw] * G,
                         group_office_kw=[site.office_kw] * G,
-                        precision=precision)
+                        precision=precision, cache_dir=cache_dir)
     state = execute_plan(plan, backend=backend, chunk_days=chunk_days,
                          devices=devices, pallas=pallas)
     res = summarize_plan(plan, state)
@@ -343,10 +347,12 @@ class Fleet:
 
     def __init__(self, campaigns: Sequence, site: Optional[Site] = None,
                  *, name: Optional[str] = None,
-                 out_dir: Optional[str] = None):
+                 out_dir: Optional[str] = None,
+                 cache_dir: Optional[str] = None):
         if not len(campaigns):
             raise ValueError("Fleet needs at least one campaign")
         self.campaigns = list(campaigns)
+        self.cache_dir = cache_dir
         if site is None:
             c0 = self.campaigns[0]
             site = Site(bands=c0.bands, carbon=c0.carbon, price=c0.price)
@@ -460,7 +466,7 @@ class Fleet:
         out = fleet_sweep(groups, self.site, price=self.site.price,
                           names=labels, backend=backend, max_days=max_days,
                           precision=precision, devices=devices,
-                          pallas=pallas)
+                          pallas=pallas, cache_dir=self.cache_dir)
         if deltas:
             for fr in out:
                 for c, r in zip(self.campaigns, fr.campaigns):
@@ -550,7 +556,7 @@ class Fleet:
             constraints=constraints, forecast=forecast,
             replan_every_h=replan_every_h, price=self.site.price,
             backend=backend, chunk_days=chunk_days,
-            solver=kwargs).run()
+            cache_dir=self.cache_dir, solver=kwargs).run()
 
     # ------------------------------------------------------------------
     def run(self, assignment=None, *, deadlines=None,

@@ -148,6 +148,7 @@ class MPCSession:
                  price=None, backend: Optional[str] = None,
                  chunk_days: Optional[int] = None,
                  max_days: int = 120,
+                 cache_dir: Optional[str] = None,
                  solver: Optional[dict] = None):
         from repro.core.optimize import canonical_metric
         self.constraints = {canonical_metric(k): float(v)
@@ -177,6 +178,7 @@ class MPCSession:
         self.backend = backend
         self.chunk_days = chunk_days
         self.max_days = int(max_days)
+        self.cache_dir = cache_dir
         self.solver = dict(solver or {})
 
     # ------------------------------------------------------------------
@@ -228,7 +230,8 @@ class MPCSession:
         # one plan against the realized truth, executed in intervals
         plan = compile_plan(
             [dataclasses.replace(case, schedule=sched)], self.price,
-            slots_per_hour=sph, max_days=self.max_days)
+            slots_per_hour=sph, max_days=self.max_days,
+            cache_dir=self.cache_dir)
         g0 = float(plan.g0[0])
         cursor = None
         fc_sigs = [fc_sig]
@@ -278,7 +281,8 @@ class MPCSession:
                 planned_runtime_h=float(np.mean(res.metrics.runtime_h)),
                 solve_s=solve_s, evaluations=res.evaluations,
                 slots_carried=cursor.t0 * plan.n_lanes, forecast_mae=0.0))
-            plan = replace_tables(plan, cursor, schedules={0: sched})
+            plan = replace_tables(plan, cursor, schedules={0: sched},
+                                  cache_dir=self.cache_dir)
 
         realized = summarize_plan(plan, cursor.state)[0]
         return MPCResult(
@@ -313,6 +317,7 @@ class FleetMPCSession:
                  price=None, backend: Optional[str] = None,
                  chunk_days: Optional[int] = None,
                  max_days: int = 240,
+                 cache_dir: Optional[str] = None,
                  solver: Optional[dict] = None):
         if not len(cases):
             raise ValueError("FleetMPCSession needs at least one case")
@@ -348,6 +353,7 @@ class FleetMPCSession:
         self.backend = backend
         self.chunk_days = chunk_days
         self.max_days = int(max_days)
+        self.cache_dir = cache_dir
         self.solver = dict(solver or {})
 
     # ------------------------------------------------------------------
@@ -401,7 +407,8 @@ class FleetMPCSession:
             [dataclasses.replace(c, schedule=s)
              for c, s in zip(cases, scheds)],
             self.price, slots_per_hour=sph, max_days=self.max_days,
-            group_sizes=[M], group_caps_kw=[cap], group_office_kw=[office])
+            group_sizes=[M], group_caps_kw=[cap], group_office_kw=[office],
+            cache_dir=self.cache_dir)
         g0 = float(plan.g0[0])
         cursor = None
         last_fc = fc_sig
@@ -465,7 +472,8 @@ class FleetMPCSession:
                 slots_carried=cursor.t0 * plan.n_lanes, forecast_mae=0.0))
             plan = replace_tables(
                 plan, cursor,
-                schedules={m: scheds[m] for m in replannable})
+                schedules={m: scheds[m] for m in replannable},
+                cache_dir=self.cache_dir)
 
         results = summarize_plan(plan, cursor.state)
         peak = (float(cursor.state.site_kw_peak.max())

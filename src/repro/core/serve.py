@@ -571,7 +571,8 @@ def execute_assignment(assignment: Assignment, window: ServingWindow,
                        backend: Optional[str] = None,
                        precision: str = "fp64",
                        devices: Optional[int] = None,
-                       pallas=None
+                       pallas=None,
+                       cache_dir: Optional[str] = None
                        ) -> Tuple[List[SimResult], AllocationSchedule,
                                   Optional[float]]:
     """Lower the admitted demand block into per-tier scan lanes and run
@@ -623,7 +624,7 @@ def execute_assignment(assignment: Assignment, window: ServingWindow,
                                              or 0.0)])
     plan = compile_plan(cases, price=window.price,
                         slots_per_hour=window.sph, precision=precision,
-                        **groups)
+                        cache_dir=cache_dir, **groups)
     state = execute_plan(plan, backend=backend, devices=devices,
                          pallas=pallas)
     results = summarize_plan(plan, state)
@@ -687,7 +688,8 @@ class ServingRollup:
 def serve_window(batch: ArrivalBatch, window: ServingWindow, *,
                  policy="greedy", tiers: Sequence[QualityTier] = DEFAULT_TIERS,
                  site=None, seed: int = 0,
-                 backend: Optional[str] = None) -> WindowReport:
+                 backend: Optional[str] = None,
+                 cache_dir: Optional[str] = None) -> WindowReport:
     """Schedule one arrival window and execute it in one compiled
     sweep: policy assignment (admission + slot + tier), engine
     execution of the admitted demand block, per-request SLO check and
@@ -697,7 +699,8 @@ def serve_window(batch: ArrivalBatch, window: ServingWindow, *,
     pol = as_serving_policy(policy)
     asn = pol.assign(batch, window, tiers, seed=seed)
     lanes, alloc, peak = execute_assignment(asn, window, tiers, site=site,
-                                            backend=backend)
+                                            backend=backend,
+                                            cache_dir=cache_dir)
 
     adm = asn.admitted
     slo_ok = adm & (asn.t_finish_h <= batch.deadline_h + 1e-9)
@@ -782,7 +785,8 @@ class ServingSession:
                  clock: Optional[SimClock] = None,
                  chip: Optional[ChipProfile] = None,
                  step_cost: Optional[StepCost] = None, tracker=None,
-                 gate: Optional[float] = None, max_queue: int = 32):
+                 gate: Optional[float] = None, max_queue: int = 32,
+                 cache_dir: Optional[str] = None):
         self.workload = workload or OEMWorkload(
             "serving", 0, rate_at_full=float(service_rate),
             batch_overhead_s=float(batch_overhead_s))
@@ -803,6 +807,7 @@ class ServingSession:
         self.batch_size = int(batch_size)
         self.seed = int(seed)
         self.backend = backend
+        self.cache_dir = cache_dir
         self._t0 = float(start_hour)
         self._queue: List[ArrivalBatch] = []
         self.reports: List[WindowReport] = []
@@ -866,7 +871,7 @@ class ServingSession:
         report = serve_window(
             batch, self.window(), policy=self.policy, tiers=self.tiers,
             site=self.site, seed=self.seed + len(self.reports),
-            backend=self.backend)
+            backend=self.backend, cache_dir=self.cache_dir)
         self._t0 += self.window_h
         self.reports.append(report)
         return report

@@ -60,13 +60,15 @@ class Campaign:
                  start_hour: float = 9.0,
                  calibrate: bool = True,
                  name: Optional[str] = None,
-                 out_dir: Optional[str] = None):
+                 out_dir: Optional[str] = None,
+                 cache_dir: Optional[str] = None):
         self.workload = workload
         self.schedule: Schedule = as_schedule(schedule)
         self.machine = machine or MachineProfile()
         self.bands = bands
         self.carbon = carbon or GridCarbonModel()
         self.price = price
+        self.cache_dir = cache_dir
         self.start_hour = start_hour
         self.calibrate = calibrate
         self.name = name or f"{getattr(workload, 'name', 'campaign')}" \
@@ -243,7 +245,7 @@ class Campaign:
                                            carbon, self.start_hour,
                                            label=lbl,
                                            deadline_h=deadline_h))
-        results = sweep(cases, price=self.price)
+        results = sweep(cases, price=self.price, cache_dir=self.cache_dir)
         return (frontier_from_sweep(results, base=self.baseline())
                 if deltas else results)
 
@@ -380,7 +382,7 @@ class Campaign:
                           constraints=constraints, forecast=forecast,
                           replan_every_h=replan_every_h, price=self.price,
                           backend=backend, chunk_days=chunk_days,
-                          solver=solver).run()
+                          cache_dir=self.cache_dir, solver=solver).run()
 
     # ------------------------------------------------------------------
     def as_fleet(self, site=None, **kwargs):

@@ -1,0 +1,389 @@
+"""Persistent plan cache + incremental delta sweeps (the perf_opt
+acceptance bar):
+
+* a fresh-process re-sweep of an identical fleet batch hits the disk
+  cache with zero classification/lowering work (`plan_misses == 0`,
+  `disk_hits >= n_cases`), results bitwise vs the cold compile;
+* `delta_sweep` with 1 changed schedule of S=100 recomputes <= 2% of
+  the full sweep's `slot_work`, spliced results bitwise-equal to a
+  full re-sweep, coupled groups re-scan whole;
+* satellites: true-LRU in-memory memo (hit refreshes recency),
+  opaque-fingerprint schedules bypass both layers without poisoning
+  the store, corrupted entries and schema-version drift recompile
+  instead of crashing, `plan_cache_info`/`clear_plan_cache` reset the
+  new counters, and the disk store's size-bounded LRU eviction.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (MachineProfile, SweepCase, TraceSignal,
+                        as_ensemble, calibrate_workload, constant_schedule,
+                        trace_sweep)
+from repro.core import engine_jax as ej
+from repro.core import plancache
+from repro.core.schedule import FunctionSchedule
+from repro.core.workload import OEM_CASE_1
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def calibrated():
+    return calibrate_workload(OEM_CASE_1, MachineProfile())
+
+
+@pytest.fixture(autouse=True)
+def _no_env_cache(monkeypatch):
+    """Keep ambient CARINA_PLAN_CACHE* out of every test: caching is
+    exercised only through explicit cache_dir= arguments here."""
+    monkeypatch.delenv("CARINA_PLAN_CACHE", raising=False)
+    monkeypatch.delenv("CARINA_PLAN_CACHE_MB", raising=False)
+
+
+def _res_key(r):
+    return (r.runtime_h, r.energy_kwh, r.co2_kg, r.cost_usd)
+
+
+def _week_trace(seed: int = 3) -> TraceSignal:
+    rng = np.random.RandomState(seed)
+    h = np.arange(96)
+    vals = 0.45 * (1.0 + 0.3 * np.sin(2 * np.pi * h / 24.0)
+                   + 0.05 * rng.rand(96))
+    return TraceSignal(tuple(float(v) for v in vals), name=f"trace{seed}")
+
+
+def _cases(calibrated, n, scenarios=600.0):
+    """n distinct small cases (distinct constant schedules, one shared
+    non-periodic trace)."""
+    wl, m = calibrated
+    wl = dataclasses.replace(wl, n_scenarios=float(scenarios))
+    trace = _week_trace()
+    us = np.linspace(0.35, 1.0, n)
+    return [SweepCase(constant_schedule(float(u)), wl, m, carbon=trace,
+                      label=f"u{j}")
+            for j, u in enumerate(us)]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: disk warm start does zero classification/lowering work
+# ---------------------------------------------------------------------------
+def test_disk_cache_warm_start_zero_work_bitwise(calibrated, tmp_path):
+    cases = _cases(calibrated, 5)
+    d = str(tmp_path / "store")
+    ej.clear_plan_cache()
+    cold = trace_sweep(cases, cache_dir=d, backend="numpy")
+    s = ej.scan_stats()
+    assert s.plan_misses == len(cases)
+    assert s.disk_misses == len(cases)
+    # simulate a fresh process: the in-memory memo is gone, disk stays
+    ej.clear_plan_cache()
+    warm = trace_sweep(cases, cache_dir=d, backend="numpy")
+    s = ej.scan_stats()
+    assert s.plan_misses == 0, "warm start must not compile anything"
+    assert s.disk_hits >= len(cases)
+    for a, b in zip(cold, warm):
+        assert _res_key(a) == _res_key(b)
+
+
+def test_fleet_warm_start_across_processes(calibrated, tmp_path):
+    """The roadmap pin, for real: a second identical coupled fleet
+    sweep in a *fresh python process* does zero classification/lowering
+    work and reproduces the cold results bitwise."""
+    d = str(tmp_path / "store")
+    script = textwrap.dedent("""
+        import dataclasses, json, sys
+        import numpy as np
+        from repro.core import (MachineProfile, Site, SweepCase,
+                                TraceSignal, calibrate_workload,
+                                constant_schedule, fleet_sweep)
+        from repro.core import engine_jax as ej
+        from repro.core.workload import OEM_CASE_1
+
+        wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+        wl = dataclasses.replace(wl, n_scenarios=600.0)
+        rng = np.random.RandomState(3)
+        h = np.arange(96)
+        vals = 0.45 * (1.0 + 0.3 * np.sin(2 * np.pi * h / 24.0)
+                       + 0.05 * rng.rand(96))
+        trace = TraceSignal(tuple(float(v) for v in vals), name="trace3")
+        groups = [[SweepCase(constant_schedule(u), wl, m, carbon=trace,
+                             label=f"u{j}")
+                   for j, u in enumerate((0.5, 0.8, 1.0))]]
+        site = Site(power_cap_kw=2.0)
+        res = fleet_sweep(groups, site, backend="numpy",
+                          cache_dir=sys.argv[1])
+        s = ej.scan_stats()
+        print(json.dumps({
+            "co2": [r.co2_kg for r in res[0].campaigns],
+            "runtime": [r.runtime_h for r in res[0].campaigns],
+            "plan_misses": s.plan_misses, "disk_hits": s.disk_hits}))
+    """)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"), JAX_PLATFORMS="cpu")
+    env.pop("CARINA_PLAN_CACHE", None)
+    runs = []
+    for _ in range(2):
+        out = subprocess.run([sys.executable, "-c", script, d], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, out.stderr
+        runs.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    cold, warm = runs
+    assert cold["plan_misses"] == 3 and cold["disk_hits"] == 0
+    assert warm["plan_misses"] == 0, "fresh process must warm-start"
+    assert warm["disk_hits"] >= 3
+    assert warm["co2"] == cold["co2"]
+    assert warm["runtime"] == cold["runtime"]
+
+
+def test_corrupted_entries_recompile_never_crash(calibrated, tmp_path):
+    cases = _cases(calibrated, 3)
+    d = str(tmp_path / "store")
+    ej.clear_plan_cache()
+    cold = trace_sweep(cases, cache_dir=d, backend="numpy")
+    cache = plancache.get_cache(d)
+    entries = cache._entries()
+    assert entries, "the store should hold entries after a cold sweep"
+    for e in entries:
+        with open(e.path, "wb") as f:
+            f.write(b"not an npz archive")
+    ej.clear_plan_cache()
+    again = trace_sweep(cases, cache_dir=d, backend="numpy")
+    s = ej.scan_stats()
+    assert s.plan_misses == len(cases), "corrupt entries must recompile"
+    for a, b in zip(cold, again):
+        assert _res_key(a) == _res_key(b)
+    # the corrupt files were dropped and replaced by fresh writes
+    for e in cache._entries():
+        with open(e.path, "rb") as f:
+            assert f.read(2) == b"PK"
+
+
+def test_schema_version_salt_invalidates(calibrated, tmp_path, monkeypatch):
+    cases = _cases(calibrated, 2)
+    d = str(tmp_path / "store")
+    ej.clear_plan_cache()
+    trace_sweep(cases, cache_dir=d, backend="numpy")
+    monkeypatch.setattr(plancache, "SCHEMA_VERSION",
+                        plancache.SCHEMA_VERSION + 1)
+    ej.clear_plan_cache()
+    trace_sweep(cases, cache_dir=d, backend="numpy")
+    s = ej.scan_stats()
+    assert s.disk_hits == 0, "a version bump must orphan old entries"
+    assert s.plan_misses == len(cases)
+
+
+def test_opaque_schedule_bypasses_both_layers(calibrated, tmp_path):
+    """A closure-bearing schedule has no value identity: it must
+    compile fresh every time (no memo hit, no disk entry — the store
+    cannot be poisoned by an object that can change behind its key)."""
+    wl, m = calibrated
+    wl = dataclasses.replace(wl, n_scenarios=400.0)
+    knob = {"u": 0.7}
+    sched = FunctionSchedule("closure", lambda ctx: knob["u"])
+    case = SweepCase(sched, wl, m, carbon=_week_trace())
+    d = str(tmp_path / "store")
+    ej.clear_plan_cache()
+    r1 = trace_sweep([case], cache_dir=d, backend="numpy")
+    r2 = trace_sweep([case], cache_dir=d, backend="numpy")
+    s = ej.scan_stats()
+    assert s.plan_hits == 0 and s.disk_hits == 0
+    assert s.plan_misses == 2, "opaque cases compile fresh every sweep"
+    assert plancache.get_cache(d).info() == (0, 0), "no entry stored"
+    assert _res_key(r1[0]) == _res_key(r2[0])
+    # the closure really is live: mutating it changes the next sweep
+    knob["u"] = 0.4
+    r3 = trace_sweep([case], cache_dir=d, backend="numpy")
+    assert r3[0].runtime_h > r1[0].runtime_h
+
+
+def test_memo_true_lru_hit_refreshes_recency(calibrated, monkeypatch):
+    """Regression for the insertion-order eviction bug: an entry hit
+    recently must survive the eviction sweep even if it was compiled
+    first."""
+    monkeypatch.setattr(ej, "_PLAN_CACHE_SIZE", 4)
+    cases = _cases(calibrated, 5)
+    ej.clear_plan_cache()
+    trace_sweep([cases[0]], backend="numpy")     # oldest by insertion
+    for c in cases[1:4]:
+        trace_sweep([c], backend="numpy")        # memo now full (4)
+    trace_sweep([cases[0]], backend="numpy")     # hit -> young end
+    assert ej.scan_stats().plan_hits == 1
+    trace_sweep([cases[4]], backend="numpy")     # evicts oldest quarter
+    ej._STATS.plan_hits = 0
+    ej._STATS.plan_misses = 0
+    trace_sweep([cases[0]], backend="numpy")
+    s = ej.scan_stats()
+    assert s.plan_hits == 1 and s.plan_misses == 0, \
+        "the recently-hit entry must have survived eviction"
+    # and the insertion-order victim is really gone
+    trace_sweep([cases[1]], backend="numpy")
+    assert ej.scan_stats().plan_misses == 1
+
+
+def test_disk_lru_eviction_bounds_store(calibrated, tmp_path):
+    cases = _cases(calibrated, 12)
+    d = str(tmp_path / "store")
+    ej.clear_plan_cache()
+    cold = trace_sweep(cases, cache_dir=d, backend="numpy")
+    cache = plancache.get_cache(d)
+    n0, bytes0 = cache.info()
+    assert n0 > 0
+    # shrink the bound below the current footprint and trigger a sweep
+    small = plancache.PlanCache(d, max_bytes=max(bytes0 // 2, 1))
+    small._evict()
+    n1, bytes1 = small.info()
+    assert bytes1 <= small.max_bytes
+    assert n1 < n0, "the oldest entries must have been swept"
+    # a sweep against the thinned store still works (partial hits +
+    # recompiles) and stays bitwise
+    ej.clear_plan_cache()
+    warm = trace_sweep(cases, cache_dir=d, backend="numpy")
+    for a, b in zip(cold, warm):
+        assert _res_key(a) == _res_key(b)
+
+
+def test_plan_cache_info_and_clear(calibrated, tmp_path):
+    cases = _cases(calibrated, 4)
+    d = str(tmp_path / "store")
+    ej.clear_plan_cache()
+    trace_sweep(cases, cache_dir=d, backend="numpy")
+    ej.clear_plan_cache()                        # memo gone, disk stays
+    trace_sweep(cases, cache_dir=d, backend="numpy")
+    info = ej.plan_cache_info(cache_dir=d)
+    assert info.mem_entries == len(cases) and info.mem_bytes > 0
+    assert info.disk_entries > 0 and info.disk_bytes > 0
+    assert info.hits >= len(cases) and info.misses == 0
+    assert info.hit_rate == 1.0
+    ej.clear_plan_cache()
+    s = ej.scan_stats()
+    assert (s.plan_hits, s.plan_misses, s.disk_hits, s.disk_misses,
+            s.lanes_recomputed, s.lanes_spliced) == (0, 0, 0, 0, 0, 0)
+    info = ej.plan_cache_info(cache_dir=d)
+    assert info.mem_entries == 0 and info.hit_rate == 0.0
+    assert info.disk_entries > 0, "clear_plan_cache leaves disk alone"
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: delta_sweep recomputes ~K/S of the slot work, bitwise
+# ---------------------------------------------------------------------------
+def test_delta_sweep_1_of_100_slot_work_and_bitwise(calibrated):
+    S = 100
+    cases = _cases(calibrated, S)
+    plan = ej.compile_plan(cases)
+    ej.reset_scan_stats()
+    state = ej.execute_plan(plan, backend="numpy")
+    base_work = ej.scan_stats().slot_work
+    prev = ej.summarize_plan(plan, state)
+
+    new_sched = constant_schedule(0.42)
+    ej.reset_scan_stats()
+    delta = ej.delta_sweep(plan, prev, schedules={7: new_sched},
+                           backend="numpy")
+    s = ej.scan_stats()
+    assert s.lanes_recomputed == 1 and s.lanes_spliced == S - 1
+    assert s.slot_work <= 0.02 * base_work, (
+        f"1-of-{S} delta re-scanned {s.slot_work}/{base_work} slot units")
+    assert delta.recomputed == (7,)
+    assert len(delta.spliced) == S - 1
+
+    full_cases = list(cases)
+    full_cases[7] = dataclasses.replace(cases[7], schedule=new_sched)
+    ref = trace_sweep(full_cases, backend="numpy")
+    for a, b in zip(delta.results, ref):
+        assert _res_key(a) == _res_key(b)
+    # the returned plan is the delta base for the *next* cycle
+    assert delta.plan.cases[7].schedule is new_sched
+
+
+def test_delta_sweep_noop_delta_splices_everything(calibrated):
+    cases = _cases(calibrated, 6)
+    plan = ej.compile_plan(cases)
+    prev = ej.summarize_plan(plan, ej.execute_plan(plan, backend="numpy"))
+    ej.reset_scan_stats()
+    # an "update" that fingerprints identically to the incumbent —
+    # e.g. the orchestrator re-sends every schedule each cycle
+    delta = ej.delta_sweep(plan, prev,
+                           schedules=[c.schedule for c in cases],
+                           backend="numpy")
+    s = ej.scan_stats()
+    assert delta.recomputed == ()
+    assert s.lanes_recomputed == 0 and s.lanes_spliced == plan.n_lanes
+    assert s.slot_work == 0, "a value-identical delta must scan nothing"
+    assert [_res_key(r) for r in delta.results] == \
+        [_res_key(r) for r in prev]
+
+
+def test_delta_sweep_carbon_delta_rescans_its_cases(calibrated):
+    cases = _cases(calibrated, 4)
+    plan = ej.compile_plan(cases)
+    prev = ej.summarize_plan(plan, ej.execute_plan(plan, backend="numpy"))
+    new_trace = _week_trace(seed=11)
+    ej.reset_scan_stats()
+    delta = ej.delta_sweep(plan, prev, carbon={2: new_trace},
+                           backend="numpy")
+    assert delta.recomputed == (2,)
+    full_cases = list(cases)
+    full_cases[2] = dataclasses.replace(cases[2], carbon=new_trace)
+    ref = trace_sweep(full_cases, backend="numpy")
+    for a, b in zip(delta.results, ref):
+        assert _res_key(a) == _res_key(b)
+
+
+def test_delta_sweep_coupled_group_rescans_whole(calibrated):
+    """A changed member of a site-capped group drags the whole group
+    into the re-scan (lanes interact through the cap every slot);
+    uncapped cases in the same plan still splice."""
+    cases = _cases(calibrated, 5)
+    plan = ej.compile_plan(cases, group_sizes=[3, 2],
+                           group_caps_kw=[2.0, None])
+    prev = ej.summarize_plan(plan, ej.execute_plan(plan, backend="numpy"))
+    new_sched = constant_schedule(0.55)
+    ej.reset_scan_stats()
+    delta = ej.delta_sweep(plan, prev, schedules={0: new_sched},
+                           backend="numpy")
+    s = ej.scan_stats()
+    assert delta.recomputed == (0, 1, 2), "the capped group goes whole"
+    assert delta.spliced == (3, 4)
+    assert s.lanes_recomputed == 3 and s.lanes_spliced == 2
+    full_cases = list(cases)
+    full_cases[0] = dataclasses.replace(cases[0], schedule=new_sched)
+    full_plan = ej.compile_plan(full_cases, group_sizes=[3, 2],
+                                group_caps_kw=[2.0, None])
+    ref = ej.summarize_plan(full_plan,
+                            ej.execute_plan(full_plan, backend="numpy"))
+    for a, b in zip(delta.results, ref):
+        assert _res_key(a) == _res_key(b)
+
+
+def test_delta_sweep_revalidates_ensemble_width(calibrated):
+    wl, m = calibrated
+    wl = dataclasses.replace(wl, n_scenarios=400.0)
+    ens = as_ensemble([_week_trace(1), _week_trace(2)], name="e2")
+    cases = [SweepCase(constant_schedule(0.8), wl, m, carbon=ens)]
+    plan = ej.compile_plan(cases)
+    prev = ej.summarize_plan(plan, ej.execute_plan(plan, backend="numpy"))
+    with pytest.raises(ValueError, match="ensemble width"):
+        ej.delta_sweep(plan, prev, carbon={0: _week_trace(9)},
+                       backend="numpy")
+
+
+def test_delta_sweep_rejects_mismatched_results(calibrated):
+    cases = _cases(calibrated, 3)
+    plan = ej.compile_plan(cases)
+    prev = ej.summarize_plan(plan, ej.execute_plan(plan, backend="numpy"))
+    with pytest.raises(ValueError, match="full result list"):
+        ej.delta_sweep(plan, prev[:-1], schedules={0: constant_schedule(0.5)})
+
+
+def test_subset_plan_refuses_split_coupled_group(calibrated):
+    cases = _cases(calibrated, 3)
+    plan = ej.compile_plan(cases, group_sizes=[3], group_caps_kw=[2.0])
+    with pytest.raises(ValueError, match="whole"):
+        ej._subset_plan(plan, [1])
