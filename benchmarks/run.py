@@ -30,6 +30,13 @@ roofline/kernel benches.  Prints ``name,us_per_call,derived`` CSV rows.
                          (bar >=5x), delta_sweep slot-work ratio at S=1000
                          for K in {1,10,100} changed schedules; writes
                          BENCH_recurrence.json for the CI artifact trail
+  calibration_sweep      measured-run calibration: fit wall-time and
+                         recovered-parameter error at U in {1e3, 1e4}
+                         synthetic logged units (jax Adam vs the numpy FD
+                         fallback), multi-zone (S, zone) batched sweep vs a
+                         per-zone python loop; writes BENCH_calibration.json
+                         for the CI artifact trail (core/calibrate.py +
+                         core/data.py)
   serving_sweep          request-level scheduler: batched window scheduling
                          + execution throughput at 20k requests across the
                          four load shapes, CO2 saved vs carbon-blind FIFO,
@@ -835,6 +842,118 @@ def recurrence_sweep():
     emit("recurrence_sweep/json", 0.0, f"wrote_{out_path}")
 
 
+def calibration_sweep():
+    """Measured-run calibration + the zone sweep axis (ISSUE 10): fit
+    wall-time and recovered-parameter error at U in {1e3, 1e4}
+    synthetic observations (the jax Adam path, plus the numpy
+    finite-difference fallback at the small size), and the multi-zone
+    (S, zone) batched sweep vs a per-zone python loop over the same
+    archive.  Writes ``BENCH_calibration.json`` (path override:
+    ``CARINA_BENCH_CALIBRATION_JSON``)."""
+    import shutil
+    import tempfile
+
+    from repro.core import (Campaign, MachineProfile, constant_schedule,
+                            load_carbon_archive, model,
+                            write_synthetic_archive)
+    from repro.core.calibrate import Observations, fit_calibration
+    from repro.core.engine_jax import clear_plan_cache
+    from repro.core.workload import OEMWorkload
+
+    fast = bool(os.environ.get("CARINA_BENCH_FAST"))
+    truth = {"rate_at_full": 3.4, "gamma": 0.65, "idle_w": 95.0,
+             "dyn_w": 260.0, "overhead_w_frac": 0.45}
+    rng = np.random.RandomState(0)
+
+    def synth(n):
+        """n synthetic operating points at the truth physics + 0.5%
+        measurement noise (the U-scaling benches need logs far larger
+        than any simulated campaign writes)."""
+        u = 0.3 + 0.7 * rng.rand(n)
+        batch = rng.choice([8.0, 16.0, 32.0, 64.0], size=n)
+        bg = rng.choice([0.02, 0.15, 0.50, 0.65], size=n)
+        r = model.rates(u, batch, bg,
+                        rate_at_full=truth["rate_at_full"],
+                        batch_overhead_s=2.0, idle_w=truth["idle_w"],
+                        dyn_w=truth["dyn_w"], alpha=1.7,
+                        gamma=truth["gamma"],
+                        overhead_w_frac=truth["overhead_w_frac"], xp=np)
+        return Observations(
+            u=u, batch=batch, background=bg,
+            scen_per_s=r.scen_per_s * (1.0 + 0.005 * rng.randn(n)),
+            p_avg_w=r.p_avg_w * (1.0 + 0.005 * rng.randn(n)),
+            weight=np.full(n, 1.0 / n))
+
+    wl0 = OEMWorkload("bench", 1, rate_at_full=3.0, batch_overhead_s=2.0)
+    m0 = MachineProfile()
+    sizes = (1000,) if fast else (1000, 10_000)
+    steps = 300 if fast else 500
+    fits = {}
+    for n in sizes:
+        obs = synth(n)
+        backends = ("jax", "numpy") if n == sizes[0] else ("jax",)
+        for backend in backends:
+            t0 = time.perf_counter()
+            cm = fit_calibration(obs, wl0, m0, steps=steps,
+                                 backend=backend)
+            dt = time.perf_counter() - t0
+            err = max(cm.rel_error(truth).values())
+            emit(f"calibration_sweep/fit_U{n}_{backend}", dt * 1e6,
+                 f"max_rel_err={err:.4f}_loss={cm.loss:.2e}")
+            fits[f"U{n}_{backend}"] = {"dt_s": dt, "max_rel_err": err,
+                                       "loss": cm.loss}
+
+    # multi-zone batched sweep vs a per-zone python loop
+    n_zones = 4 if fast else 8
+    S = 8 if fast else 12
+    d = tempfile.mkdtemp(prefix="carina-calib-bench-")
+    try:
+        arch = load_carbon_archive(write_synthetic_archive(
+            os.path.join(d, "bench.csv"),
+            zones=tuple(f"Z{i}" for i in range(n_zones)), days=7, seed=2))
+        wl = OEMWorkload("zsweep", 40_000, rate_at_full=2.3,
+                         batch_overhead_s=2.0)
+        scheds = [constant_schedule(0.35 + 0.6 * i / max(S - 1, 1))
+                  for i in range(S)]
+        c = Campaign(wl)
+        clear_plan_cache()
+        t0 = time.perf_counter()
+        rows = c.sweep(scheds, zones=arch)
+        dt_batched = time.perf_counter() - t0
+        clear_plan_cache()
+        t0 = time.perf_counter()
+        loop_rows = []
+        for z in arch.zones:
+            loop_rows.extend(c.sweep(scheds,
+                                     carbon_trace=arch[z].to_trace()))
+        dt_loop = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    scen = wl.n_scenarios * len(rows)
+    bitwise = all(
+        (a.runtime_h, a.energy_kwh, a.co2_kg)
+        == (b.runtime_h, b.energy_kwh, b.co2_kg)
+        for a, b in zip(rows, loop_rows))
+    emit(f"calibration_sweep/zones_batched_S{S}_Z{n_zones}",
+         dt_batched * 1e6, f"scen_per_s={scen / dt_batched:.0f}")
+    emit(f"calibration_sweep/zones_loop_S{S}_Z{n_zones}", dt_loop * 1e6,
+         f"scen_per_s={scen / dt_loop:.0f}")
+    emit(f"calibration_sweep/zones_batched_vs_loop_S{S}_Z{n_zones}", 0.0,
+         f"x{dt_loop / max(dt_batched, 1e-9):.1f}_bitwise={bitwise}")
+
+    out_path = os.environ.get("CARINA_BENCH_CALIBRATION_JSON",
+                              "BENCH_calibration.json")
+    with open(out_path, "w") as f:
+        json.dump({"bench": "calibration_sweep", "fits": fits,
+                   "zones": {"S": S, "n_zones": n_zones,
+                             "dt_batched_s": dt_batched,
+                             "dt_loop_s": dt_loop,
+                             "speedup": dt_loop / max(dt_batched, 1e-9),
+                             "bitwise": bitwise}},
+                  f, indent=2)
+    emit("calibration_sweep/json", 0.0, f"wrote_{out_path}")
+
+
 BENCHES = {
     "fig1_policy_frontier": fig1_policy_frontier,
     "frontier_sweep": frontier_sweep,
@@ -845,6 +964,7 @@ BENCHES = {
     "serving_sweep": serving_sweep,
     "scaleout_sweep": scaleout_sweep,
     "recurrence_sweep": recurrence_sweep,
+    "calibration_sweep": calibration_sweep,
     "mpc_sweep": mpc_sweep,
     "oem_case_studies": oem_case_studies,
     "campaign_projection": campaign_projection,

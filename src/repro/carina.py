@@ -40,6 +40,10 @@ from repro.core import (  # noqa: F401
     # time structure + models
     BANDS, TimeBands, GridCarbonModel, MIDWEST_HOURLY, DTE_FACTOR,
     ChipProfile, EnergyModel, MachineProfile, StepCost, site_throttle,
+    # grid-data ingestion (numpy-only; calibration itself is lazy below)
+    GAP_POLICIES, SAMPLE_ARCHIVES, CarbonArchive, QualityReport,
+    ZoneSeries, load_carbon_archive, load_sample_archive,
+    sample_archive_path, write_synthetic_archive,
     # sweep engines (periodic 24-slot; the trace-grid scan's trace_sweep
     # is re-exported lazily below so importing carina stays jax-free)
     SweepCase, frontier_from_sweep, hourly_profile, sweep,
@@ -68,6 +72,10 @@ _LAZY = ("trace_sweep", "TraceObjective", "EvalMetrics", "evaluate_params",
          # receding-horizon MPC (drives optimize + the trace engine)
          "MPCSession", "FleetMPCSession", "MPCResult", "ReplanRecord",
          "run_mpc",
+         # measured-run calibration (fits via the optimizer -> lazy)
+         "CalibratedModel", "CalibrationObjective", "FIT_PARAMS",
+         "Observations", "fit_calibration", "load_observations",
+         "observations_from_units",
          "Objective", "OptimizeResult", "FleetOptimizeResult",
          "optimize_schedule", "optimize_fleet", "pareto_front",
          "reduce_ensemble", "ROBUST_MODES", "scalarize_fleet",

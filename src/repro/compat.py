@@ -12,6 +12,7 @@ out-of-order exits restore the right value on every jax version.
 from __future__ import annotations
 
 import contextlib
+import os
 import threading
 
 import jax
@@ -60,6 +61,42 @@ def enable_x64(new_val: bool = True):
                 else:
                     jax.config.update("jax_enable_x64", saved)
                 break
+
+
+# Active persistent-compilation-cache directory (None = not enabled).
+_compilation_cache_dir = None
+
+
+def enable_persistent_compilation_cache(cache_dir=None):
+    """Point jax's persistent compilation cache at a directory.
+
+    The plan cache (core/plancache.py) removes re-*staging* across
+    processes but a fresh process still pays every XLA compile; jax's
+    own persistent cache closes that gap.  `CARINA_JAX_CACHE` (env)
+    wins over `cache_dir`; with neither set this is a no-op returning
+    None.  The min-entry-size/min-compile-time floors are dropped so
+    even the engine's small chunk kernels are cached — CARINA's
+    kernels are many and cheap, which is exactly the population the
+    default floors exclude.  Idempotent (re-pointing at the active
+    directory is free) and soft-failing: a jax too old to have the
+    config knobs just leaves the cache off.
+    """
+    global _compilation_cache_dir
+    target = os.environ.get("CARINA_JAX_CACHE") or cache_dir
+    if not target:
+        return None
+    target = os.path.abspath(target)
+    if _compilation_cache_dir == target:
+        return target
+    try:
+        os.makedirs(target, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", target)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    except Exception:
+        return None
+    _compilation_cache_dir = target
+    return target
 
 
 if hasattr(jax.lax, "axis_size"):

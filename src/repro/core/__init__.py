@@ -10,6 +10,10 @@ from repro.core.arrivals import (ArrivalBatch, DEFAULT_TIERS, LOAD_SHAPES,  # no
 from repro.core.carbon import DTE_FACTOR, GridCarbonModel, MIDWEST_HOURLY  # noqa: F401
 from repro.core.controller import CarinaController, IntensityDecision, SimClock  # noqa: F401
 from repro.core.dashboard import render_frontier_dashboard, render_run_dashboard  # noqa: F401
+from repro.core.data import (GAP_POLICIES, SAMPLE_ARCHIVES, CarbonArchive,  # noqa: F401
+                             QualityReport, ZoneSeries, load_carbon_archive,
+                             load_sample_archive, sample_archive_path,
+                             write_synthetic_archive)
 from repro.core.energy import (ChipProfile, EnergyModel, MachineProfile,  # noqa: F401
                                StepCost)
 from repro.core.engine import SweepCase, frontier_from_sweep, hourly_profile, sweep  # noqa: F401
@@ -88,6 +92,15 @@ _LAZY = {
     "run_mpc": "repro.core.mpc",
     "FleetTraceObjective": "repro.core.engine_jax",
     "FleetEvalMetrics": "repro.core.engine_jax",
+    # measured-run calibration: the jit path rides optimize/_grad_search,
+    # so the module stays behind the lazy door like the optimizer itself
+    "CalibratedModel": "repro.core.calibrate",
+    "CalibrationObjective": "repro.core.calibrate",
+    "FIT_PARAMS": "repro.core.calibrate",
+    "Observations": "repro.core.calibrate",
+    "fit_calibration": "repro.core.calibrate",
+    "load_observations": "repro.core.calibrate",
+    "observations_from_units": "repro.core.calibrate",
     "Objective": "repro.core.optimize",
     "OptimizeResult": "repro.core.optimize",
     "FleetOptimizeResult": "repro.core.optimize",

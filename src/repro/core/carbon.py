@@ -24,6 +24,11 @@ class GridCarbonModel:
     factor_kg_per_kwh: float = DTE_FACTOR
     # optional hourly multiplier (len 24, mean ~1.0); None = flat (paper mode)
     hourly_curve: Optional[Sequence[float]] = None
+    # provenance of the emission factor (grid zone + data source), stamped
+    # into RunTracker logs so calibration runs are self-describing; None
+    # keeps the paper-faithful anonymous-factor default
+    zone: Optional[str] = None
+    source: Optional[str] = None
 
     def factor_at(self, hour_of_day: float) -> float:
         if self.hourly_curve is None:

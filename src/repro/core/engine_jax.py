@@ -74,11 +74,15 @@ try:                                    # JAX is optional on the trace path
     import jax
     import jax.numpy as jnp
 
-    from repro.compat import enable_x64
+    from repro.compat import (enable_persistent_compilation_cache,
+                              enable_x64)
     _HAS_JAX = True
 except Exception:                       # pragma: no cover - env without jax
     jax = jnp = enable_x64 = None
     _HAS_JAX = False
+
+    def enable_persistent_compilation_cache(cache_dir=None):
+        return None                     # nothing to cache without jax
 
 _PROBE_PROGRESS = (0.0, 1.0 / 3.0, 2.0 / 3.0, 0.999)
 _PROBE_OFFSETS = (0.0, 3.0, 5.0, 9.0, 13.0, 17.0, 21.0)
@@ -915,6 +919,11 @@ def compile_plan(cases: Sequence, price: Optional[Signal] = None, *,
                 for c, ens in zip(cases, ensembles)]
 
     cache = plancache.get_cache(cache_dir)
+    # fresh-process warm starts should skip XLA compiles too, not just
+    # plan staging: point jax's persistent compilation cache at a
+    # sibling of the plan store ("<root>/xla"; CARINA_JAX_CACHE wins)
+    enable_persistent_compilation_cache(
+        os.path.join(cache.root, "xla") if cache is not None else None)
     memo: dict = {}
     keys = [_fingerprint(c, price, sph, B, max_days, memo) for c in cases]
     compiled: List[Optional[_CaseCompiled]] = [

@@ -283,8 +283,13 @@ def trace_windows(values, window_h: int, stride_h: Optional[int] = None,
     hours.  Raises if the series is shorter than one window.  `pad` is
     forwarded to every member `TraceSignal` — pass ``"raise"`` to make
     sampling past a window's end an error instead of a silent clamp
-    (see `TraceSignal.pad`).
+    (see `TraceSignal.pad`).  A `TraceSignal` is accepted directly
+    (e.g. a `ZoneSeries.to_trace()` from an archive): its values are
+    windowed and, like any other series, every member is re-anchored to
+    `start_hour`.
     """
+    if isinstance(values, TraceSignal):
+        values = values.values
     arr = np.asarray(list(values), dtype=float).ravel()
     window_h = int(window_h)
     stride = int(stride_h) if stride_h is not None else window_h

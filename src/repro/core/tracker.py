@@ -14,6 +14,11 @@ from typing import Any, Dict, List, Optional
 
 from repro.core.carbon import GridCarbonModel
 
+# Version stamped into every JSONL record so logs are self-describing:
+# readers can evolve the schema without guessing what an old log meant.
+# v1 = the original field set + the carbon provenance meta keys.
+SCHEMA_VERSION = 1
+
 
 @dataclasses.dataclass
 class UnitRecord:
@@ -25,6 +30,7 @@ class UnitRecord:
     co2_kg: float
     sim_time_h: float             # absolute simulated clock (hour-of-day = % 24)
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schema: int = SCHEMA_VERSION
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), sort_keys=True)
@@ -54,6 +60,15 @@ class RunTracker:
         self.granularity = granularity
         self.records: List[UnitRecord] = []
         self.meta = dict(meta or {})
+        # emission-factor provenance: calibration replays a log long
+        # after the session that wrote it, so the log itself must say
+        # which grid factor translated kWh to kg
+        self.meta.setdefault("carbon_factor_kg_per_kwh",
+                             self.carbon.factor_kg_per_kwh)
+        if self.carbon.zone:
+            self.meta.setdefault("carbon_zone", self.carbon.zone)
+        if self.carbon.source:
+            self.meta.setdefault("carbon_source", self.carbon.source)
         self._log_path = log_path
         self._log_file = None
         if log_path:
@@ -76,6 +91,12 @@ class RunTracker:
                     energy_kwh: float, sim_time_h: float,
                     meta: Optional[dict] = None) -> UnitRecord:
         co2 = self.carbon.co2_kg(energy_kwh, hour_of_day=sim_time_h % 24.0)
+        if self.carbon.zone or self.carbon.source:
+            meta = dict(meta or {})
+            if self.carbon.zone:
+                meta.setdefault("zone", self.carbon.zone)
+            if self.carbon.source:
+                meta.setdefault("source", self.carbon.source)
         if self.granularity == "run":
             # accumulate the hour-aware CO2 too, so run-mode totals respect
             # an hourly_curve instead of re-deriving at the flat factor
@@ -133,8 +154,14 @@ def load_units(path: str) -> List[UnitRecord]:
     Malformed lines (a unit torn mid-write by a crash) are skipped, not
     fatal — a resumed tracker appends to the same log, so valid records can
     follow a torn one.  A crash loses at most the unit that was mid-write.
-    Summary lines from clean close() calls are skipped too.
+    Summary lines from clean close() calls are skipped too.  Unknown keys
+    (a record written by a *newer* schema) are dropped rather than fatal,
+    and records missing the v1 fields are treated like torn lines — the
+    `schema` field says what the writer meant, so readers degrade
+    gracefully in both directions.
     """
+    known = {f.name for f in dataclasses.fields(UnitRecord)}
+    required = known - {"meta", "schema"}
     units: List[UnitRecord] = []
     with open(path) as f:
         for line in f:
@@ -145,9 +172,12 @@ def load_units(path: str) -> List[UnitRecord]:
                 d = json.loads(line)
             except json.JSONDecodeError:
                 continue                   # torn mid-write: skip that unit
-            if "summary" in d:
+            if not isinstance(d, dict) or "summary" in d:
                 continue
-            units.append(UnitRecord(**d))
+            if not required <= set(d):
+                continue                   # truncated / foreign record
+            units.append(UnitRecord(**{k: v for k, v in d.items()
+                                       if k in known}))
     return units
 
 

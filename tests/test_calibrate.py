@@ -1,0 +1,312 @@
+"""Measured-run calibration + the zone sweep axis.
+
+The acceptance pins of the grid-data/calibration subsystem:
+
+* round trip — simulate OEM-style campaigns with *known* model
+  parameters, log them through `RunTracker`, and `Campaign.calibrate`
+  recovers every fitted parameter within 2% (both the jax Adam path and
+  the NumPy finite-difference fallback), with seeded bootstrap CIs and
+  emission-factor provenance carried through;
+* zone sweeps — `Campaign.sweep(zones=<3-zone archive>)` matches the
+  three per-zone sweeps bitwise, goes through the persistent plan cache
+  (disk_hits pinned on a warm re-sweep), and the `window_h` variant
+  yields the full (S, E, zone) ensemble grid; `Fleet.sweep(zones=...)`
+  expands assignments the same way.
+
+Plus the tracker-log hardening that calibration leans on: schema
+version stamping, torn/truncated/foreign lines skipped on load.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (BASELINE, PEAK_AWARE_BOOSTED, Campaign, Decision,
+                        Fleet, GridCarbonModel, MIDWEST_HOURLY,
+                        MachineProfile, OEMWorkload, RunTracker, UnitRecord,
+                        constant_schedule, load_sample_archive, load_units)
+from repro.core.calibrate import (FIT_PARAMS, CalibrationObjective,
+                                  observations_from_units)
+from repro.core.tracker import SCHEMA_VERSION
+
+jax = pytest.importorskip("jax")
+from repro.core import engine_jax  # noqa: E402
+
+
+# Ground-truth physics the measured run executes under; the fit starts
+# from a wrong-but-plausible prior (default machine, rate_at_full=3.0).
+TRUTH = {"rate_at_full": 3.4, "gamma": 0.65, "idle_w": 95.0,
+         "dyn_w": 260.0, "overhead_w_frac": 0.45}
+
+
+class Excite:
+    """Identification schedule: walks intensity over [0.3, 1.0] and
+    alternates small/large batches so every fitted parameter is excited
+    (constant-u logs leave gamma/overhead_w_frac unidentifiable)."""
+    name = "excite"
+
+    def decide(self, ctx):
+        h = int(ctx.hour_of_day)
+        u = 0.3 + 0.7 * ((h * 7) % 24) / 23.0
+        return Decision(u, batch_size=8 if h % 2 else 32)
+
+
+def _carbon():
+    # an hourly curve forces simulate_campaign onto the hourly segment
+    # grid -> ~1 logged unit per hour; zone/source exercise provenance
+    return GridCarbonModel(hourly_curve=MIDWEST_HOURLY, zone="US-MISO",
+                           source="sample")
+
+
+@pytest.fixture(scope="module")
+def measured_log(tmp_path_factory):
+    """Run the TRUTH campaign once, tracked; yield its units.jsonl dir."""
+    out = str(tmp_path_factory.mktemp("measured"))
+    wl = OEMWorkload("truth", 150_000, rate_at_full=TRUTH["rate_at_full"],
+                     batch_overhead_s=2.0)
+    m = MachineProfile(idle_w=TRUTH["idle_w"], dyn_w=TRUTH["dyn_w"],
+                       gamma=TRUTH["gamma"],
+                       overhead_w_frac=TRUTH["overhead_w_frac"])
+    report = Campaign(wl, Excite(), m, carbon=_carbon(),
+                      out_dir=out).run(track=True, render=False)
+    assert report.summary is not None and report.summary.units >= 20
+    return out
+
+
+def _nominal(out_dir):
+    wl = OEMWorkload("nominal", 150_000, rate_at_full=3.0,
+                     batch_overhead_s=2.0)
+    return Campaign(wl, Excite(), MachineProfile(), carbon=_carbon(),
+                    out_dir=out_dir)
+
+
+# ----------------------------------------------------------------------
+# the round-trip pin
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["jax", "numpy"])
+def test_round_trip_recovers_truth(measured_log, backend):
+    cm = _nominal(measured_log).calibrate(backend=backend)
+    assert cm.backend == backend
+    assert cm.fit == FIT_PARAMS and cm.n_units >= 20
+    errs = cm.rel_error(TRUTH)
+    assert set(errs) == set(FIT_PARAMS)
+    assert max(errs.values()) < 0.02, errs          # the acceptance bar
+    # provenance rides along: where the log came from, which grid zone
+    assert cm.source == os.path.join(measured_log, "units.jsonl")
+    assert cm.zone == "US-MISO"
+    assert cm.init["rate_at_full"] == pytest.approx(3.0)
+    # the recorded history is the monotone best-so-far loss curve
+    assert cm.history[-1] <= cm.history[0]
+    assert cm.loss < 1e-4
+
+
+def test_bootstrap_cis_bracket_the_fit(measured_log):
+    cm = _nominal(measured_log).calibrate(backend="numpy", bootstrap=4,
+                                          seed=3)
+    assert set(cm.ci) == set(FIT_PARAMS)
+    for f, (lo, hi) in cm.ci.items():
+        assert lo <= hi
+        assert lo <= cm.params[f] * 1.05 and hi >= cm.params[f] * 0.95
+    # seeded: same bootstrap seed -> identical intervals
+    cm2 = _nominal(measured_log).calibrate(backend="numpy", bootstrap=4,
+                                           seed=3)
+    assert cm2.ci == cm.ci
+
+
+def test_apply_updates_campaign_physics(measured_log):
+    c = _nominal(measured_log)
+    wl0, m0 = c.calibrated()
+    cm = c.calibrate(backend="numpy", apply=True)
+    wl1, m1 = c.calibrated()
+    assert wl1.rate_at_full == pytest.approx(TRUTH["rate_at_full"],
+                                             rel=0.02)
+    assert m1.gamma == pytest.approx(TRUTH["gamma"], rel=0.02)
+    assert m1.alpha == m0.alpha                    # not in the fit set
+    assert wl0.rate_at_full == pytest.approx(3.0)  # original untouched
+    assert cm.params.keys() == set(FIT_PARAMS)
+
+
+def test_calibrate_from_live_units(measured_log):
+    units = load_units(os.path.join(measured_log, "units.jsonl"))
+    cm = _nominal(None).calibrate(units=units, backend="numpy", steps=300)
+    assert max(cm.rel_error(TRUTH).values()) < 0.05
+    assert cm.source is None                       # no disk round-trip
+
+
+def test_calibrate_without_a_run_is_an_error(tmp_path):
+    with pytest.raises(ValueError, match="measured run"):
+        Campaign(OEMWorkload("x", 1000, rate_at_full=1.0,
+                             batch_overhead_s=2.0)).calibrate()
+    with pytest.raises(ValueError, match="measured run"):
+        Campaign(OEMWorkload("x", 1000, rate_at_full=1.0,
+                             batch_overhead_s=2.0),
+                 out_dir=str(tmp_path)).calibrate()   # no units.jsonl yet
+
+
+# ----------------------------------------------------------------------
+# objective/observation plumbing
+# ----------------------------------------------------------------------
+def _unit(i, phase="night", intensity=0.8, runtime_s=3600.0,
+          energy_kwh=0.2, scen=5000.0, batch=32):
+    return UnitRecord(i, phase, intensity, runtime_s, energy_kwh, 0.05,
+                      float(i), {"scenarios": scen, "batch": batch})
+
+
+def test_observation_lifting_drops_junk_units():
+    units = [_unit(0),
+             _unit(1, runtime_s=0.0),              # no wall time
+             _unit(2, phase="maintenance"),        # unknown band
+             _unit(3, scen=0.0),                   # no scenario count
+             _unit(4, energy_kwh=0.0),             # no energy reading
+             _unit(5, phase="peak")]
+    obs = observations_from_units(units)
+    assert obs.n == 2
+    assert obs.background.tolist() == [0.02, 0.65]  # night, peak
+    assert obs.scen_per_s[0] == pytest.approx(5000.0 / 3600.0)
+    assert obs.p_avg_w[0] == pytest.approx(0.2 * 3.6e6 / 3600.0)
+    assert obs.weight.sum() == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="no calibratable units"):
+        observations_from_units([_unit(0, runtime_s=0.0)])
+
+
+def test_objective_rejects_bad_fit_sets():
+    obs = observations_from_units([_unit(0)])
+    wl = OEMWorkload("w", 1000, rate_at_full=2.0, batch_overhead_s=2.0)
+    with pytest.raises(ValueError, match="unknown fit parameter"):
+        CalibrationObjective(obs, wl, MachineProfile(), fit=("alpha_w",))
+    wl0 = OEMWorkload("w", 1000, rate_at_full=0.0, batch_overhead_s=2.0)
+    with pytest.raises(ValueError, match="zero initial"):
+        CalibrationObjective(obs, wl0, MachineProfile())
+    # p = 0 decodes to exactly the configured starting values
+    o = CalibrationObjective(obs, wl, MachineProfile())
+    th = o.theta(np.zeros(len(o.fit)))
+    assert th["rate_at_full"] == 2.0
+    assert th["idle_w"] == MachineProfile().idle_w
+
+
+# ----------------------------------------------------------------------
+# tracker hardening the calibration loop leans on
+# ----------------------------------------------------------------------
+def test_units_carry_schema_and_provenance(measured_log):
+    units = load_units(os.path.join(measured_log, "units.jsonl"))
+    assert units and all(r.schema == SCHEMA_VERSION for r in units)
+    assert all(r.meta.get("zone") == "US-MISO" for r in units)
+    assert all(r.meta.get("source") == "sample" for r in units)
+
+
+def test_tracker_meta_records_emission_factor(tmp_path):
+    t = RunTracker("t", carbon=_carbon(),
+                   log_path=str(tmp_path / "u.jsonl"))
+    s = t.close()
+    assert s.meta["carbon_zone"] == "US-MISO"
+    assert s.meta["carbon_source"] == "sample"
+    assert s.meta["carbon_factor_kg_per_kwh"] > 0.0
+
+
+def test_load_units_tolerates_torn_and_foreign_lines(tmp_path):
+    p = tmp_path / "log.jsonl"
+    good = _unit(0).to_json()
+    newer = dict(json.loads(good), schema=99, future_field="?")
+    lines = [good,
+             good[: len(good) // 2],               # torn mid-write
+             json.dumps({"index": 1, "phase": "night"}),   # truncated
+             json.dumps(["not", "a", "record"]),   # wrong shape
+             json.dumps({"summary": {"units": 1}}),  # clean close() line
+             json.dumps(newer),                    # newer schema, extra key
+             _unit(2).to_json()]
+    p.write_text("\n".join(lines) + "\n")
+    units = load_units(str(p))
+    assert [u.index for u in units] == [0, 0, 2]
+    assert units[1].schema == 99                   # preserved, not dropped
+    assert not hasattr(units[1], "future_field")
+
+
+# ----------------------------------------------------------------------
+# the zone axis: (S, zone) and (S, E, zone) sweeps
+# ----------------------------------------------------------------------
+SCHEDS = [constant_schedule(0.4), constant_schedule(0.85),
+          PEAK_AWARE_BOOSTED]
+
+
+@pytest.fixture(scope="module")
+def arch():
+    return load_sample_archive("grid_week_3z.csv")   # DE, SE-SE3, US-MISO
+
+
+def _sweep_campaign(cache_dir=None):
+    wl = OEMWorkload("zsweep", 40_000, rate_at_full=2.3,
+                     batch_overhead_s=2.0)
+    return Campaign(wl, cache_dir=cache_dir)
+
+
+def _key(r):
+    return (r.runtime_h, r.energy_kwh, r.co2_kg)
+
+
+def test_zone_sweep_matches_per_zone_bitwise(arch, tmp_path):
+    engine_jax.clear_plan_cache()
+    c = _sweep_campaign(cache_dir=str(tmp_path))
+    rows = c.sweep(SCHEDS, zones=arch)
+    labels = [f"{s.name}@{z}" for z in arch.zones for s in SCHEDS]
+    assert [r.policy for r in rows] == labels
+    for z in arch.zones:
+        solo = _sweep_campaign().sweep(SCHEDS,
+                                       carbon_trace=arch[z].to_trace())
+        batched = [r for r in rows if r.policy.endswith(f"@{z}")]
+        assert [_key(a) for a in batched] == [_key(b) for b in solo]
+
+    # warm re-sweep: drop the in-process memo (counters too, disk kept),
+    # so every plan must come back from the persistent cache
+    engine_jax.clear_plan_cache()
+    warm = _sweep_campaign(cache_dir=str(tmp_path)).sweep(SCHEDS,
+                                                          zones=arch)
+    st = engine_jax.scan_stats()
+    assert st.disk_hits == 9 and st.disk_misses == 0
+    assert [_key(a) for a in warm] == [_key(b) for b in rows]
+
+
+def test_zone_ensemble_sweep_is_s_e_zone(arch):
+    rows = _sweep_campaign().sweep(SCHEDS, zones=arch, window_h=48,
+                                   stride_h=24)
+    assert len(rows) == len(SCHEDS) * 3
+    for r in rows:
+        assert r.co2_ensemble is not None
+        assert len(r.co2_ensemble.samples) == 6    # (168-48)/24 + 1
+        assert r.co2_ensemble.lo <= r.co2_kg <= r.co2_ensemble.hi
+
+
+def test_zone_argument_validation(arch):
+    c = _sweep_campaign()
+    with pytest.raises(ValueError, match="only one of"):
+        c.sweep(SCHEDS, zones=arch, carbon_trace=[0.4] * 48)
+    with pytest.raises(ValueError, match="need zones="):
+        c.sweep(SCHEDS, window_h=48)
+    with pytest.raises(TypeError, match="zones="):
+        c.sweep(SCHEDS, zones=[0.4] * 48)
+    with pytest.raises(ValueError, match="at least one zone"):
+        c.sweep(SCHEDS, zones={})
+
+
+def test_zone_mapping_accepts_raw_series():
+    zones = {"FLAT": [0.5] * 72, "RAMP": list(np.linspace(0.2, 0.8, 72))}
+    rows = _sweep_campaign().sweep([BASELINE], zones=zones)
+    assert [r.policy for r in rows] == ["baseline@FLAT", "baseline@RAMP"]
+    assert rows[0].co2_kg != rows[1].co2_kg
+
+
+def test_fleet_zone_sweep_expands_assignments(arch):
+    wl_a = OEMWorkload("a", 30_000, rate_at_full=2.3, batch_overhead_s=2.0)
+    wl_b = OEMWorkload("b", 45_000, rate_at_full=2.3, batch_overhead_s=2.0)
+    fleet = Fleet([Campaign(wl_a), Campaign(wl_b)])
+    out = fleet.sweep([BASELINE], zones=arch)
+    assert [fr.policy for fr in out] == [f"baseline@{z}"
+                                         for z in arch.zones]
+    for fr in out:
+        assert len(fr.campaigns) == 2
+    solo = Fleet([Campaign(wl_a), Campaign(wl_b)]).sweep(
+        [BASELINE], carbon_trace=arch["DE"].to_trace())
+    assert [_key(r) for r in out[0].campaigns] == \
+        [_key(r) for r in solo[0].campaigns]
+    with pytest.raises(ValueError, match="only one of"):
+        fleet.sweep([BASELINE], zones=arch, carbon_trace=[0.4] * 48)

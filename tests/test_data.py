@@ -1,0 +1,302 @@
+"""Grid-data ingestion layer (core/data.py): parse/validate split.
+
+* bundled sample archives load offline, normalized to hourly kg/kWh;
+* DST spring-forward gaps and fall-back duplicate hours are repaired
+  and *counted* (QualityReport — nothing silent);
+* sub-hourly (5-min) archives downsample onto the hourly slot grid;
+* gap policies: interpolate / hold / raise, and `to_ensemble` rejects a
+  series whose repaired gap exceeds the window;
+* unit handling: explicit column, file-wide override, magnitude
+  inference — and a g-vs-kg multi-zone mix without unit info is an
+  error, not a 1000x corruption.
+"""
+import datetime as dt
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.data import (SAMPLE_ARCHIVES, CarbonArchive,
+                             load_carbon_archive, load_sample_archive,
+                             sample_archive_path, write_synthetic_archive)
+from repro.core.signal import SignalEnsemble, TraceSignal, trace_windows
+
+
+def _write_csv(path, rows, header=("datetime", "zone",
+                                   "carbon_intensity")):
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(v) for v in r) + "\n")
+    return str(path)
+
+
+def _hours(start, n, skip=(), repeat=()):
+    """ISO timestamps start+0h..start+n-1h, minus `skip`, doubling `repeat`."""
+    t0 = dt.datetime.fromisoformat(start)
+    out = []
+    for i in range(n):
+        if i in skip:
+            continue
+        out.append((i, (t0 + dt.timedelta(hours=i)).isoformat()))
+        if i in repeat:
+            out.append((i, (t0 + dt.timedelta(hours=i)).isoformat()))
+    return out
+
+
+# ----------------------------------------------------------------------
+# bundled samples
+# ----------------------------------------------------------------------
+def test_bundled_samples_load():
+    for name in SAMPLE_ARCHIVES:
+        arch = load_sample_archive(name)
+        assert isinstance(arch, CarbonArchive)
+        for s in arch:
+            assert s.hours >= 24
+            vals = np.asarray(s.values)
+            # normalized units: plausible kg CO2e/kWh, never grams
+            assert 0.0 < vals.min() and vals.max() < 2.0
+            assert s.quality.gap_policy == "interpolate"
+
+
+def test_bundled_sample_path_errors():
+    with pytest.raises(FileNotFoundError):
+        sample_archive_path("no_such_archive.csv")
+
+
+def test_three_zone_sample_shape():
+    arch = load_sample_archive("grid_week_3z.csv")
+    assert len(arch.zones) == 3
+    assert arch["DE"].hours == 168
+    assert arch["DE"].quality.unit == "g"          # source unit recorded
+    with pytest.raises(KeyError):
+        arch["FR"]
+    with pytest.raises(ValueError):                # ambiguous zone pick
+        arch.to_trace()
+    t = arch.to_trace(zone="DE")
+    assert isinstance(t, TraceSignal) and t.hours == 168.0
+
+
+def test_zone_filter_on_load():
+    arch = load_carbon_archive(sample_archive_path("grid_week_3z.csv"),
+                               zone="SE-SE3")
+    assert arch.zones == ("SE-SE3",)
+    assert isinstance(arch.to_trace(), TraceSignal)   # unambiguous now
+    with pytest.raises(ValueError):
+        load_carbon_archive(sample_archive_path("grid_week_3z.csv"),
+                            zone="XX")
+
+
+# ----------------------------------------------------------------------
+# DST edge cases
+# ----------------------------------------------------------------------
+def test_dst_spring_forward_gap_interpolated(tmp_path):
+    rows = [(ts, "Z", 0.4 + 0.001 * i)
+            for i, ts in _hours("2024-03-10T00:00", 30, skip={2})]
+    p = _write_csv(tmp_path / "spring.csv", rows)
+    arch = load_carbon_archive(p, unit="kg")
+    s = arch["Z"]
+    q = s.quality
+    assert q.gaps_filled == 1 and q.dst_skips == 1
+    assert q.gap_runs == (1,) and q.longest_gap_h == 1
+    assert s.hours == 30                           # grid is contiguous
+    # the skipped hour is the linear midpoint of its neighbours
+    assert s.values[2] == pytest.approx(
+        (s.values[1] + s.values[3]) / 2.0)
+
+
+def test_dst_fall_back_duplicate_hour_collapsed(tmp_path):
+    fold_vals = iter((0.3, 0.5))                   # the two 01:00 samples
+    rows = [(ts, "Z", next(fold_vals) if i == 1 else 0.4)
+            for i, ts in _hours("2024-11-03T00:00", 30, repeat={1})]
+    p = _write_csv(tmp_path / "fall.csv", rows)
+    s = load_carbon_archive(p, unit="kg")["Z"]
+    q = s.quality
+    assert q.duplicates_collapsed == 1 and q.dst_folds == 1
+    assert q.gaps_filled == 0
+    assert s.hours == 30
+    assert s.values[1] == pytest.approx(0.4)       # mean of the fold
+
+
+def test_bundled_dst_sample_has_both_defects():
+    q = load_sample_archive("dst_week.csv")["US-CAL"].quality
+    assert q.dst_skips == 1 and q.gaps_filled == 1
+    assert q.dst_folds == 1 and q.duplicates_collapsed == 1
+
+
+# ----------------------------------------------------------------------
+# gap policies
+# ----------------------------------------------------------------------
+@pytest.fixture
+def gappy(tmp_path):
+    rows = [(ts, "Z", 0.2 + 0.01 * i)
+            for i, ts in _hours("2024-01-01T00:00", 48,
+                                skip={10, 11, 12, 13})]
+    return _write_csv(tmp_path / "gappy.csv", rows)
+
+
+def test_gap_policy_interpolate(gappy):
+    s = load_carbon_archive(gappy, unit="kg")["Z"]
+    assert s.quality.gaps_filled == 4
+    assert s.quality.gap_runs == (4,)
+    expect = np.interp([10, 11, 12, 13], [9, 14],
+                       [s.values[9], s.values[14]])
+    assert np.allclose(s.values[10:14], expect)
+
+
+def test_gap_policy_hold(gappy):
+    s = load_carbon_archive(gappy, unit="kg", gap_policy="hold")["Z"]
+    assert all(v == s.values[9] for v in s.values[10:14])
+
+
+def test_gap_policy_raise(gappy):
+    with pytest.raises(ValueError, match="missing hour"):
+        load_carbon_archive(gappy, unit="kg", gap_policy="raise")
+    with pytest.raises(ValueError, match="gap_policy"):
+        load_carbon_archive(gappy, unit="kg", gap_policy="zero")
+
+
+def test_long_gap_rejected_by_to_ensemble(gappy):
+    s = load_carbon_archive(gappy, unit="kg")["Z"]
+    with pytest.raises(ValueError, match="repaired gap"):
+        s.to_ensemble(3)                     # 4h repaired gap > 3h window
+    ens = s.to_ensemble(12, 6)               # window covers the gap: fine
+    assert isinstance(ens, SignalEnsemble)
+
+
+# ----------------------------------------------------------------------
+# sub-hourly downsampling
+# ----------------------------------------------------------------------
+def test_subhourly_downsampled_to_hourly(tmp_path):
+    t0 = dt.datetime.fromisoformat("2024-06-01T00:00")
+    rows = [((t0 + dt.timedelta(minutes=5 * i)).isoformat(), "Z",
+             100.0 + (i // 12))                    # grams; constant per hour
+            for i in range(12 * 36)]
+    p = _write_csv(tmp_path / "fine.csv", rows)
+    s = load_carbon_archive(p)["Z"]
+    q = s.quality
+    assert q.subhourly_minutes == 5
+    assert q.duplicates_collapsed == 0             # cadence, not duplication
+    assert s.hours == 36
+    # in-hour mean of a constant block is that block's value, in kg
+    assert s.values[0] == pytest.approx(0.100)
+    assert s.values[35] == pytest.approx(0.135)
+
+
+def test_bundled_5min_sample_downsamples():
+    s = load_sample_archive("midwest_5min.json")["US-MISO"]
+    assert s.quality.subhourly_minutes == 5
+    assert s.hours == 48
+
+
+# ----------------------------------------------------------------------
+# units
+# ----------------------------------------------------------------------
+def test_mixed_inferred_units_rejected(tmp_path):
+    rows = [(ts, "G-LAND", 450.0 + i) for i, ts in
+            _hours("2024-01-01T00:00", 24)]
+    rows += [(ts, "KG-LAND", 0.45 + 0.001 * i) for i, ts in
+             _hours("2024-01-01T00:00", 24)]
+    p = _write_csv(tmp_path / "mixed.csv", rows)
+    with pytest.raises(ValueError, match="inferred"):
+        load_carbon_archive(p)
+    # an explicit per-row unit column resolves the same mix fine
+    rows_u = [(ts, "G-LAND", 450.0, "gCO2/kWh") for _, ts in
+              _hours("2024-01-01T00:00", 24)]
+    rows_u += [(ts, "KG-LAND", 0.45, "kgCO2/kWh") for _, ts in
+               _hours("2024-01-01T00:00", 24)]
+    p2 = _write_csv(tmp_path / "mixed_units.csv", rows_u,
+                    header=("datetime", "zone", "carbon_intensity",
+                            "unit"))
+    arch = load_carbon_archive(p2)
+    assert arch["G-LAND"].values[0] == pytest.approx(0.450)
+    assert arch["KG-LAND"].values[0] == pytest.approx(0.45)
+
+
+def test_unit_override_and_lbs_per_mwh(tmp_path):
+    rows = [(ts, "WT", 900.0) for _, ts in _hours("2024-01-01T00:00", 24)]
+    p = _write_csv(tmp_path / "moer.csv", rows,
+                   header=("point_time", "ba", "moer"))
+    s = load_carbon_archive(p, unit="lbs/MWh")["WT"]
+    assert s.values[0] == pytest.approx(900.0 * 0.453592 / 1000.0)
+    with pytest.raises(ValueError, match="unit"):
+        load_carbon_archive(p, unit="furlongs")
+
+
+def test_out_of_order_rows_sorted_and_counted(tmp_path):
+    ts = [t for _, t in _hours("2024-01-01T00:00", 6)]
+    order = [0, 2, 1, 3, 5, 4]
+    rows = [(ts[i], "Z", 0.1 * (i + 1)) for i in order]
+    p = _write_csv(tmp_path / "shuffled.csv", rows)
+    s = load_carbon_archive(p, unit="kg")["Z"]
+    assert s.quality.out_of_order == 2
+    assert list(s.values) == pytest.approx([0.1 * (i + 1)
+                                            for i in range(6)])
+
+
+# ----------------------------------------------------------------------
+# formats + synthetic writer
+# ----------------------------------------------------------------------
+def test_json_record_forms(tmp_path):
+    recs = [{"datetime": t, "carbon_intensity": 300.0 + i, "unit": "g"}
+            for i, t in _hours("2024-01-01T00:00", 24)]
+    p1 = tmp_path / "em.json"
+    p1.write_text(json.dumps({"zone": "DE", "history": recs}))
+    arch = load_carbon_archive(str(p1))
+    assert arch.zones == ("DE",)
+    assert arch["DE"].values[0] == pytest.approx(0.300)
+
+    p2 = tmp_path / "list.json"
+    p2.write_text(json.dumps(recs))
+    s = load_carbon_archive(str(p2))["list"]       # zone <- file stem
+    assert s.hours == 24
+
+    p3 = tmp_path / "bad.json"
+    p3.write_text(json.dumps({"whatever": 1}))
+    with pytest.raises(ValueError):
+        load_carbon_archive(str(p3))
+
+
+def test_unix_timestamps_accepted(tmp_path):
+    t0 = dt.datetime(2024, 1, 1, tzinfo=dt.timezone.utc)
+    rows = [(int((t0 + dt.timedelta(hours=i)).timestamp()), "Z", 0.4)
+            for i in range(24)]
+    p = _write_csv(tmp_path / "unix.csv", rows)
+    assert load_carbon_archive(p, unit="kg")["Z"].hours == 24
+
+
+def test_synthetic_writer_roundtrip_and_seeding(tmp_path):
+    p1 = write_synthetic_archive(str(tmp_path / "a.csv"),
+                                 zones=("X", "Y"), days=3, seed=5)
+    p2 = write_synthetic_archive(str(tmp_path / "b.csv"),
+                                 zones=("X", "Y"), days=3, seed=5)
+    a, b = load_carbon_archive(p1), load_carbon_archive(p2)
+    assert a.zones == b.zones == ("X", "Y")
+    assert a["X"].values == b["X"].values          # seeded determinism
+    assert a["X"].quality.clean
+    pj = write_synthetic_archive(str(tmp_path / "c.json"),
+                                 zones=("X",), days=2, seed=5)
+    assert load_carbon_archive(pj)["X"].hours == 48
+
+
+def test_synthetic_writer_injects_defects(tmp_path):
+    p = write_synthetic_archive(str(tmp_path / "d.csv"), zones=("Z",),
+                                days=4, seed=1, dst="both", gap=(60, 5))
+    q = load_carbon_archive(p)["Z"].quality
+    assert q.dst_skips >= 1 and q.dst_folds >= 1
+    assert q.longest_gap_h == 5
+
+
+def test_trace_windows_accepts_trace_signal():
+    s = load_sample_archive("grid_week_3z.csv")["DE"]
+    via_trace = trace_windows(s.to_trace(), 48, 24)
+    via_method = s.to_ensemble(48, 24)
+    assert len(via_trace) == len(via_method)
+    assert via_trace.members[0].values == via_method.members[0].values
+
+
+def test_samples_are_small():
+    # bundled fixtures must stay repo-friendly
+    for name in SAMPLE_ARCHIVES:
+        assert os.path.getsize(sample_archive_path(name)) < 200_000

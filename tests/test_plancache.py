@@ -41,10 +41,12 @@ def calibrated():
 
 @pytest.fixture(autouse=True)
 def _no_env_cache(monkeypatch):
-    """Keep ambient CARINA_PLAN_CACHE* out of every test: caching is
-    exercised only through explicit cache_dir= arguments here."""
+    """Keep ambient CARINA_PLAN_CACHE* / CARINA_JAX_CACHE out of every
+    test: caching is exercised only through explicit cache_dir=
+    arguments here."""
     monkeypatch.delenv("CARINA_PLAN_CACHE", raising=False)
     monkeypatch.delenv("CARINA_PLAN_CACHE_MB", raising=False)
+    monkeypatch.delenv("CARINA_JAX_CACHE", raising=False)
 
 
 def _res_key(r):
@@ -140,6 +142,86 @@ def test_fleet_warm_start_across_processes(calibrated, tmp_path):
     assert warm["disk_hits"] >= 3
     assert warm["co2"] == cold["co2"]
     assert warm["runtime"] == cold["runtime"]
+
+
+def test_xla_compilation_cache_warm_across_processes(tmp_path):
+    """Satellite: the persistent *XLA* compilation cache rides next to
+    the plan store (`<cache_dir>/xla`, wired by compile_plan through
+    `repro.compat.enable_persistent_compilation_cache`).  The plan
+    store skips re-*lowering*; this skips re-*compiling* the jitted
+    scan itself.  A fresh process re-running the same sweep must load
+    its executable from disk: cold = compilation-cache misses + files
+    written, warm = hits with zero misses, results bitwise."""
+    d = str(tmp_path / "store")
+    script = textwrap.dedent("""
+        import dataclasses, glob, json, os, sys
+        from jax._src import monitoring
+
+        counts = {"misses": 0, "hits": 0}
+
+        def _listen(event, *a, **kw):
+            if event.endswith("cache_misses"):
+                counts["misses"] += 1
+            elif event.endswith("cache_hits"):
+                counts["hits"] += 1
+
+        monitoring.register_event_listener(_listen)
+
+        from repro.core import (MachineProfile, SweepCase, TraceSignal,
+                                calibrate_workload, constant_schedule,
+                                trace_sweep)
+        from repro.core.workload import OEM_CASE_1
+
+        wl, m = calibrate_workload(OEM_CASE_1, MachineProfile())
+        wl = dataclasses.replace(wl, n_scenarios=40_000.0)
+        trace = TraceSignal(tuple([0.4] * 72), name="flat")
+        res = trace_sweep([SweepCase(constant_schedule(0.8), wl, m,
+                                     carbon=trace)],
+                          cache_dir=sys.argv[1])
+        xla = os.path.join(sys.argv[1], "xla")
+        files = [p for p in glob.glob(os.path.join(xla, "**", "*"),
+                                      recursive=True) if os.path.isfile(p)]
+        print(json.dumps({"misses": counts["misses"],
+                          "hits": counts["hits"], "files": len(files),
+                          "co2": res[0].co2_kg}))
+    """)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"), JAX_PLATFORMS="cpu")
+    for k in ("CARINA_PLAN_CACHE", "CARINA_JAX_CACHE"):
+        env.pop(k, None)
+    runs = []
+    for _ in range(2):
+        out = subprocess.run([sys.executable, "-c", script, d], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, out.stderr
+        runs.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    cold, warm = runs
+    assert cold["misses"] > 0 and cold["hits"] == 0
+    assert cold["files"] > 0, "the cold run must persist its executable"
+    assert warm["misses"] == 0, "a fresh process must not recompile"
+    assert warm["hits"] > 0
+    assert warm["co2"] == cold["co2"]
+
+
+def test_env_var_jax_cache_override(tmp_path, monkeypatch):
+    """CARINA_JAX_CACHE redirects the XLA cache independently of the
+    plan store (compat-level guard, idempotent, soft-fail)."""
+    import jax
+
+    from repro import compat
+    override = str(tmp_path / "elsewhere")
+    monkeypatch.setenv("CARINA_JAX_CACHE", override)
+    monkeypatch.setattr(compat, "_compilation_cache_dir", None)
+    before = jax.config.jax_compilation_cache_dir
+    try:
+        active = compat.enable_persistent_compilation_cache(
+            str(tmp_path / "ignored"))
+        assert active == os.path.abspath(override)
+        # idempotent: a second call with any argument keeps the active dir
+        assert compat.enable_persistent_compilation_cache(None) == \
+            os.path.abspath(override)
+    finally:
+        jax.config.update("jax_compilation_cache_dir", before)
 
 
 def test_corrupted_entries_recompile_never_crash(calibrated, tmp_path):
